@@ -1,0 +1,69 @@
+"""Distributed-step benchmark: Artemis vs baseline on a host mesh.
+
+Times one optimizer step of a reduced arch with/without compressed
+aggregation, and reports the analytic inter-worker wire bytes — the quantity
+the paper's technique reduces (and §Roofline's collective term measures on
+the production mesh).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import dist
+from repro.launch import mesh as M
+from repro.models.model import build_model
+from repro.optim import sgd
+
+
+def _wire_bytes(params, variant, n_workers, s=1):
+    """Analytic per-step inter-worker bytes per worker (uplink+downlink)."""
+    total_f32 = sum(l.size * 4 for l in jax.tree.leaves(params))
+    total_int8 = sum(l.size for l in jax.tree.leaves(params))
+    scales = sum((l.size // l.shape[-1] if l.ndim else 1) * 4
+                 for l in jax.tree.leaves(params))
+    ring_f32 = 2 * (n_workers - 1) / n_workers * total_f32      # all-reduce
+    ring_q = (n_workers - 1) * (total_int8 + scales) / n_workers
+    if variant == "sgd":
+        return ring_f32
+    up = ring_q
+    dwn = 0.0 if variant in ("biqsgd", "artemis") else ring_f32 / 2
+    return up + dwn
+
+
+def dist_step_suite():
+    rows = []
+    mesh = M.make_host_mesh()
+    cfg = configs.get_config("starcoder2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 128), 0,
+                                          cfg.vocab)}
+    n_workers = jax.device_count()
+    with jax.set_mesh(mesh):
+        for variant in ["none", "sgd", "qsgd", "artemis"]:
+            dcfg = None if variant == "none" else dist.DistConfig(
+                worker_axes=("data",), variant=variant)
+            init_state, step_fn = dist.make_train_step(model, sgd(0.01), dcfg,
+                                                       mesh)
+            state = init_state(params)
+            jstep = jax.jit(step_fn)
+            state, out = jstep(state, batch)
+            jax.block_until_ready(out)
+            t0 = time.time()
+            for _ in range(3):
+                state, out = jstep(state, batch)
+            jax.block_until_ready(out)
+            us = (time.time() - t0) / 3 * 1e6
+            wire = _wire_bytes(params, variant if variant != "none" else "sgd",
+                               max(n_workers, 2))
+            rows.append((f"dist_step/{variant}", us,
+                         f"wire_bytes_per_worker={wire:.3e}"))
+    return rows
+
+
+ALL = [dist_step_suite]

@@ -1,0 +1,48 @@
+"""§Perf hillclimb driver: run one (arch x shape x mesh x dist) combo with
+config/dist overrides in a subprocess and print the three roofline terms.
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb mistral-large-123b train_4k \
+      multipod artemis remat_policy=dots_with_no_batch_dims_saveable
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import tempfile
+
+
+def run(arch, shape, mesh, dist, cfg_over=(), dist_over=()):
+    with tempfile.NamedTemporaryFile(suffix=".json") as tf:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--dist", dist,
+               "--out", tf.name]
+        for o in cfg_over:
+            cmd += ["--cfg-override", o]
+        for o in dist_over:
+            cmd += ["--dist-override", o]
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
+        try:
+            rec = json.load(open(tf.name))[0]
+        except Exception:
+            return {"status": "error", "error": (proc.stderr or "?")[-400:]}
+    return rec
+
+
+def show(tag, rec):
+    if rec.get("status") != "ok":
+        print(f"{tag:58s} ERROR {rec.get('error','')[:120]}")
+        return
+    pk = (rec["memory_analysis"]["peak_bytes"] or 0) / 2**30
+    print(f"{tag:58s} C={rec['compute_s']:.3f}s M={rec['memory_s']:.3f}s "
+          f"X={rec['collective_s']:.3f}s dom={rec['dominant']:10s} "
+          f"peak={pk:.1f}GiB useful={rec['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    arch, shape, mesh, dist = sys.argv[1:5]
+    overrides = sys.argv[5:]
+    cfg_over = [o for o in overrides if not o.startswith("dist.")]
+    dist_over = [o[5:] for o in overrides if o.startswith("dist.")]
+    rec = run(arch, shape, mesh, dist, cfg_over, dist_over)
+    show(f"{arch}x{shape}x{mesh}x{dist} {' '.join(overrides)}", rec)

@@ -1,0 +1,30 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import dist_bench, kernel_bench, paper_figs
+
+    suites = paper_figs.ALL + kernel_bench.ALL + dist_bench.ALL
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in suites:
+        if only and only not in suite.__name__:
+            continue
+        try:
+            for name, us, derived in suite():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{suite.__name__},NaN,ERROR")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

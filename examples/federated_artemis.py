@@ -1,0 +1,82 @@
+"""Paper reproduction walkthrough (Artemis, Philippenko & Dieuleveut 2020).
+
+Runs the paper's four headline experiments on the federated simulator and
+prints the claims being validated:
+
+  1. Fig 3a  — sigma_* != 0, i.i.d.: every variant saturates; double
+               compression saturates above single, above SGD (Thm 1 / Thm 3).
+  2. Fig S8  — sigma_* == 0: LINEAR convergence for all variants.
+  3. Fig 3b  — non-i.i.d., full batch: memory removes the B^2 term — Artemis
+               converges linearly where Bi-QSGD stalls.
+  4. Fig 5/6 — partial participation: PP1 saturates, the novel PP2 does not.
+
+    PYTHONPATH=src python examples/federated_artemis.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import artemis as art
+from repro.core import federated as fed
+
+KEY = jax.random.PRNGKey(0)
+N, D = 20, 20
+
+
+def exp1_saturation():
+    print("\n=== 1. Fig 3a: saturation under sigma_* != 0 (i.i.d. LSR) ===")
+    prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.4)
+    opt = float(prob.global_loss(prob.solve_opt()))
+    gamma = 0.8 * fed.gamma_max(prob, art.variant_config("artemis", D, N))
+    for v in ["sgd", "qsgd", "diana", "biqsgd", "artemis"]:
+        r = fed.run(prob, art.variant_config(v, D, N), gamma=gamma, iters=3000,
+                    key=KEY, batch=1)
+        sat = float(np.mean(r.losses[-300:])) - opt
+        print(f"  {v:8s} saturation = {sat:.2e}")
+    print("  -> ordering sgd < one-way < two-way, as Thm 1's E predicts")
+
+
+def exp2_linear():
+    print("\n=== 2. Fig S8: linear convergence when sigma_* == 0 ===")
+    prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.0)
+    for v in ["sgd", "qsgd", "biqsgd", "artemis"]:
+        cfg = art.variant_config(v, D, N)
+        g = fed.gamma_max(prob, cfg)
+        r = fed.run(prob, cfg, gamma=g, iters=600, key=KEY, batch=8)
+        print(f"  {v:8s} F(w_600)-F* = {r.losses[-1]:.2e}  (gamma_max={g:.4f})")
+    print("  -> all reach ~machine precision: threshold E ∝ sigma_*^2 = 0")
+
+
+def exp3_memory():
+    print("\n=== 3. Fig 3b: heterogeneity — memory removes B^2 ===")
+    prob = fed.make_logistic_problem(jax.random.PRNGKey(3), n_workers=N,
+                                     n_per=200, d=2)
+    opt = float(prob.global_loss(prob.solve_opt()))
+    gamma = 1.0 / (2 * prob.smoothness())
+    for v in ["biqsgd", "artemis"]:
+        r = fed.run(prob, art.variant_config(v, 2, N), gamma=gamma, iters=800,
+                    key=KEY, full_batch=True)
+        tag = "memoryless" if v == "biqsgd" else "with memory"
+        print(f"  {v:8s} ({tag:11s}) excess = {r.losses[-1] - opt:.2e}")
+    print("  -> identical compression, only the memory differs")
+
+
+def exp4_pp():
+    print("\n=== 4. Fig 5/6: partial participation, PP1 vs PP2 (p=0.5) ===")
+    prob = fed.make_logistic_problem(jax.random.PRNGKey(5), n_workers=N,
+                                     n_per=200, d=2)
+    opt = float(prob.global_loss(prob.solve_opt()))
+    gamma = 1.0 / (2 * prob.smoothness())
+    for mode in ["pp1", "pp2"]:
+        cfg = art.variant_config("artemis", 2, N, p=0.5, pp_mode=mode)
+        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
+        print(f"  {mode}: excess = {float(np.mean(r.losses[-50:])) - opt:.2e}")
+    print("  -> PP1 saturates at (1-p)B^2/(Np); PP2 (the paper's novel "
+          "algorithm) converges linearly")
+
+
+if __name__ == "__main__":
+    exp1_saturation()
+    exp2_linear()
+    exp3_memory()
+    exp4_pp()

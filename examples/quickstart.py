@@ -1,0 +1,42 @@
+"""Quickstart: train a tiny transformer with bidirectional-compressed
+gradient aggregation (Artemis) on whatever devices this host has.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import dist
+from repro.data.synthetic import TokenStream, TokenStreamConfig
+from repro.launch import mesh as M
+from repro.models.model import build_model
+from repro.optim import adam
+
+
+def main():
+    cfg = configs.get_config("starcoder2-7b", reduced=True)
+    model = build_model(cfg)
+    mesh = M.make_host_mesh()
+
+    # Artemis over the 'data' axis: uplink int8 ring + memory, zero-byte
+    # downlink broadcast. With one device this degrades to plain compression
+    # noise on the gradient — still exercises the full code path.
+    dcfg = dist.DistConfig(worker_axes=("data",), variant="artemis", s=4)
+
+    init_state, step_fn = dist.make_train_step(model, adam(3e-3), dcfg, mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(TokenStreamConfig(vocab=cfg.vocab, seq_len=128, batch=8))
+
+    with jax.set_mesh(mesh):
+        state = init_state(params)
+        jstep = jax.jit(step_fn)
+        for i in range(50):
+            state, (loss, _) = jstep(state, stream.batch_at(i))
+            if i % 10 == 0 or i == 49:
+                print(f"step {i:3d}  loss {float(loss):.4f}")
+    print("done — loss should have dropped by >1 nat.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving demo: greedy decode with a ring-buffer KV cache.
+
+Serves the reduced mixtral (MoE + sliding window) so the interesting decode
+machinery — expert routing per token, O(window) cache — is exercised.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as S
+
+
+if __name__ == "__main__":
+    S.main(["--arch", "mixtral-8x22b", "--reduced",
+            "--batch", "4", "--prompt-len", "16", "--gen", "24"])

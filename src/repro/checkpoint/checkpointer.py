@@ -1,0 +1,80 @@
+"""Minimal sharding-aware checkpointer: npz payload + JSON manifest.
+
+Saves a pytree of jax.Arrays as flattened npz entries keyed by tree path;
+restores onto the caller-provided sharding (device_put per leaf).  No orbax
+in this offline container — the format is deliberately trivial and
+append-only (step-numbered directories + a LATEST pointer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_SAFE.sub("_", str(getattr(p, "key", getattr(p, "idx", p))))
+                       for p in path)
+        out[key or "_root"] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, extra: Optional[dict] = None):
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(str(step))
+    return d
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of ``like``; optionally device_put with
+    per-leaf shardings (same treedef as ``like``)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like, treedef = _flatten(like)
+    leaves = []
+    for key, ref in flat_like.items():
+        arr = data[key]
+        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+        leaves.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree

@@ -1,0 +1,1 @@
+from repro.core import artemis, compression, federated  # noqa: F401

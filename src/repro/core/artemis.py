@@ -1,0 +1,156 @@
+"""Artemis (paper Algorithm 1) as a functional JAX module.
+
+One round maps stacked per-worker stochastic gradients ``g: [N, d]`` to the
+descent direction ``Omega: [d]`` plus the next algorithm state.  All six
+framework variants are obtained from the same code path:
+
+    variant     C_up        C_dwn      memory(alpha)
+    sgd         identity    identity   0
+    qsgd        squant      identity   0
+    diana       squant      identity   >0
+    biqsgd      squant      squant     0
+    artemis     squant      squant     >0
+    sgd-mem     identity    identity   >0      (PP2 benchmark of Fig. 6)
+
+Partial participation: ``active`` is a {0,1} mask of shape [N].
+ * PP1 — server holds per-worker memories; ghat = mean_S(Delta_hat_i + h_i)/p.
+ * PP2 — server holds ONE memory hbar reused for inactive workers (novel algo):
+         ghat = hbar + (1/(pN)) sum_S Delta_hat_i ;  hbar += (alpha/N) sum_S Delta_hat_i.
+
+Error feedback (beyond paper, Dore-style) is available via ``error_feedback=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtemisConfig:
+    dim: int
+    n_workers: int
+    up: str = "squant"            # uplink compressor name
+    dwn: str = "squant"           # downlink compressor name
+    up_kwargs: dict = dataclasses.field(default_factory=dict)
+    dwn_kwargs: dict = dataclasses.field(default_factory=dict)
+    alpha: Optional[float] = None  # memory rate; None -> 1/(2(omega_up+1)); 0 disables
+    p: float = 1.0                 # participation probability (Assumption 6)
+    pp_mode: str = "pp2"           # 'pp1' | 'pp2'
+    error_feedback: bool = False   # Dore-like EF (beyond paper)
+
+    def compressors(self) -> Tuple[comp.Compressor, comp.Compressor]:
+        c_up = comp.make_compressor(self.up, self.dim, **self.up_kwargs)
+        c_dwn = comp.make_compressor(self.dwn, self.dim, **self.dwn_kwargs)
+        return c_up, c_dwn
+
+    def resolved_alpha(self) -> float:
+        if self.alpha is not None:
+            return float(self.alpha)
+        c_up, _ = self.compressors()
+        if c_up.omega == 0.0:
+            return 0.0   # no uplink compression -> memory unnecessary by default
+        return 1.0 / (2.0 * (c_up.omega + 1.0))
+
+
+class ArtemisState(NamedTuple):
+    h: jax.Array        # [N, d] per-worker memories (zeros when alpha == 0)
+    hbar: jax.Array     # [d] server memory  (PP2; == mean(h) under full participation)
+    e: jax.Array        # [N, d] error-feedback buffers (zeros unless enabled)
+    step: jax.Array     # scalar int32
+
+
+def init_state(cfg: ArtemisConfig, dtype=jnp.float32) -> ArtemisState:
+    n, d = cfg.n_workers, cfg.dim
+    return ArtemisState(
+        h=jnp.zeros((n, d), dtype),
+        hbar=jnp.zeros((d,), dtype),
+        e=jnp.zeros((n, d), dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def variant_config(variant: str, dim: int, n_workers: int, s: int = 1,
+                   p: float = 1.0, pp_mode: str = "pp2",
+                   alpha: Optional[float] = None) -> ArtemisConfig:
+    """Build the config for one of the named paper variants."""
+    table = {
+        "sgd":      dict(up="identity", dwn="identity", alpha=0.0),
+        "qsgd":     dict(up="squant", dwn="identity", alpha=0.0),
+        "diana":    dict(up="squant", dwn="identity", alpha=alpha),
+        "biqsgd":   dict(up="squant", dwn="squant", alpha=0.0),
+        "artemis":  dict(up="squant", dwn="squant", alpha=alpha),
+        "sgd-mem":  dict(up="identity", dwn="identity", alpha=alpha if alpha is not None else 0.5),
+        "dore":     dict(up="squant", dwn="squant", alpha=alpha, error_feedback=True),
+    }
+    if variant not in table:
+        raise ValueError(f"unknown variant {variant!r}; choose from {sorted(table)}")
+    kw = table[variant]
+    return ArtemisConfig(dim=dim, n_workers=n_workers, p=p, pp_mode=pp_mode,
+                         up_kwargs={"s": s}, dwn_kwargs={"s": s}, **kw)
+
+
+def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
+                  key: jax.Array, active: Optional[jax.Array] = None):
+    """One communication round.
+
+    Args:
+      grads:  [N, d] per-worker stochastic gradients g_{k+1}^i(w_k).
+      active: optional {0,1} float mask [N]; default all-active.
+
+    Returns:
+      omega:  [d] the (doubly) compressed descent direction Omega_{k+1}.
+      state':  updated ArtemisState.
+      stats:  dict of bit costs and diagnostics for this round.
+    """
+    c_up, c_dwn = cfg.compressors()
+    alpha = cfg.resolved_alpha()
+    n, d = cfg.n_workers, cfg.dim
+    if active is None:
+        active = jnp.ones((n,), grads.dtype)
+    active = active.astype(grads.dtype)[:, None]          # [N,1]
+
+    up_key, dwn_key = jax.random.split(jax.random.fold_in(key, state.step))
+    up_keys = jax.random.split(up_key, n)
+
+    # ---- workers: compress gradient differences ---------------------------
+    delta = grads - state.h                                # [N,d]
+    if cfg.error_feedback:
+        delta = delta + state.e
+    delta_hat = jax.vmap(c_up)(up_keys, delta)             # [N,d]
+    if cfg.error_feedback:
+        new_e = state.e + (grads - state.h) - delta_hat
+        new_e = active * new_e + (1 - active) * state.e
+    else:
+        new_e = state.e
+    # only active workers compress/communicate & update their local memory
+    delta_hat = active * delta_hat
+    new_h = state.h + alpha * delta_hat                    # inactive rows unchanged
+
+    # ---- server: reconstruct, aggregate, compress downlink ----------------
+    sum_hat = jnp.sum(delta_hat, axis=0)                   # [d]
+    if cfg.pp_mode == "pp2":
+        ghat = state.hbar + sum_hat / (cfg.p * n)
+        new_hbar = state.hbar + alpha * jnp.sum(delta_hat, axis=0) / n
+    elif cfg.pp_mode == "pp1":
+        # server-side copies of h_i; only ACTIVE memories are read
+        ghat = jnp.sum(active * (delta_hat + state.h), axis=0) / (cfg.p * n)
+        new_hbar = jnp.mean(new_h, axis=0)
+    else:
+        raise ValueError(f"unknown pp_mode {cfg.pp_mode!r}")
+
+    omega = c_dwn(dwn_key, ghat)
+
+    n_active = jnp.sum(active)
+    stats = {
+        "uplink_bits": n_active * c_up.bits(d),
+        "dwnlink_bits": float(n) * c_dwn.bits(d),
+        "compress_err_up": jnp.mean(jnp.sum((delta_hat - active * delta) ** 2, -1)),
+        "compress_err_dwn": jnp.sum((omega - ghat) ** 2),
+        "ghat_norm": jnp.linalg.norm(ghat),
+    }
+    return omega, ArtemisState(new_h, new_hbar, new_e, state.step + 1), stats

@@ -1,0 +1,46 @@
+"""Sharded batch pipeline: host-local numpy generation -> global jax.Array.
+
+On a real multi-host cluster each process generates only its addressable
+shard (``process_index``-keyed slice of the global batch) and the global
+array is assembled with ``jax.make_array_from_process_local_data``; in this
+single-process container that degenerates to a device_put with the requested
+sharding, exercising the same code path.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import TokenStream, TokenStreamConfig
+
+
+class ShardedBatches:
+    def __init__(self, stream: TokenStream, mesh: Optional[Mesh] = None,
+                 batch_axes=("pod", "data")):
+        self.stream = stream
+        self.mesh = mesh
+        if mesh is not None:
+            axes, seen = [], set()
+            for a in batch_axes:
+                if a in mesh.axis_names and a not in seen:
+                    axes.append(a)
+                    seen.add(a)
+            axes = tuple(axes)
+            self.sharding = NamedSharding(mesh, P(axes))
+        else:
+            self.sharding = None
+
+    def batch_at(self, step: int) -> dict:
+        batch = self.stream.batch_at(step)
+        if self.sharding is None:
+            return batch
+        return {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

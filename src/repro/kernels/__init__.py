@@ -1,0 +1,1 @@
+from repro.kernels import ops, ref, squant, fused_memory, ring_sum  # noqa: F401

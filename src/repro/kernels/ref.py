@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+All references operate on 2-D arrays already padded to block multiples,
+with per-(bm x bn)-block scales — the exact layout the kernels produce, so
+tests can require bit-exact agreement (same uniform randomness ``u``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _blockify(x: jnp.ndarray, bm: int, bn: int):
+    """[M, N] -> [M//bm, N//bn, bm, bn]."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    return (x.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3))
+
+
+def _unblockify(b: jnp.ndarray):
+    gm, gn, bm, bn = b.shape
+    return b.transpose(0, 2, 1, 3).reshape(gm * bm, gn * bn)
+
+
+def squant_encode_ref(x: jnp.ndarray, u: jnp.ndarray, s: int, bm: int, bn: int):
+    """Per-block stochastic s-quantization.
+
+    Returns (q: int8 [M,N], scales: f32 [M//bm, N//bn]) with
+    dequant(q, scales) = q * scale_of_block, scale = ||block||_2 / s.
+    """
+    xb = _blockify(x, bm, bn).astype(jnp.float32)
+    ub = _blockify(u, bm, bn).astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(xb**2, axis=(-2, -1)))            # [gm, gn]
+    scales = norms / s
+    safe = jnp.where(norms > 0, norms, 1.0)[..., None, None]
+    r = jnp.abs(xb) / safe * s
+    low = jnp.floor(r)
+    psi = low + (ub < (r - low)).astype(jnp.float32)
+    q = (jnp.sign(xb) * psi).astype(jnp.int8)
+    return _unblockify(q), scales.astype(jnp.float32)
+
+
+def squant_decode_ref(q: jnp.ndarray, scales: jnp.ndarray, bm: int, bn: int,
+                      dtype=jnp.float32):
+    qb = _blockify(q, bm, bn).astype(dtype)
+    return _unblockify(qb * scales[..., None, None].astype(dtype))
+
+
+def fused_memory_ref(g: jnp.ndarray, h: jnp.ndarray, u: jnp.ndarray,
+                     alpha: float, s: int, bm: int, bn: int):
+    """delta = g - h; (q, scales) = encode(delta); h' = h + alpha * deq(q).
+
+    One logical HBM pass (the point of the fused kernel).
+    Returns (q, scales, h_new).
+    """
+    delta = g - h
+    q, scales = squant_encode_ref(delta, u, s, bm, bn)
+    h_new = h + alpha * squant_decode_ref(q, scales, bm, bn, dtype=g.dtype)
+    return q, scales, h_new
+
+
+def dequant_apply_ref(w: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
+                      gamma: float, bm: int, bn: int):
+    """w' = w - gamma * deq(q, scales)."""
+    return w - gamma * squant_decode_ref(q, scales, bm, bn, dtype=w.dtype)

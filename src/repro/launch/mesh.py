@@ -1,0 +1,204 @@
+"""Production mesh + sharding policy.
+
+Mesh axes:
+  multi-pod  : (pod=2, data=16, model=16) — 512 chips; 'pod' is the Artemis
+               worker axis (slow DCN inter-pod links = the paper's
+               bandwidth-constrained uplink/downlink).
+  single-pod : (data=16, model=16) — 256 chips; Artemis (when enabled) uses
+               'data' as the worker axis.
+
+Parameter policy: 2-D sharding — reduction/feature dims over ('data',
+'model') for all big matrices (FSDP x tensor), experts over 'model'
+(expert parallelism), vocab over 'data'. Dims that don't divide the axis
+size are left unsharded (GSPMD would pad; we prefer explicit replication).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: Tuple[int, ...] = None, axes=None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    if shape is None:
+        shape = (n, 1)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _maybe(mesh: Mesh, axis: Optional[str], dim: int) -> Optional[str]:
+    """Use ``axis`` only if it exists and divides ``dim``."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               data_axis: str = "data", model_axis: str = "model") -> P:
+    """Sharding spec for one parameter leaf (path is '/'-joined tree path)."""
+    nd = len(shape)
+    if "moe" in path and nd >= 3:
+        # [ (L,) E, d_in, d_out ]: experts over model when E divides it
+        # (expert parallelism), else fall back to 2-D (d_in x d_out) sharding
+        # — e.g. mixtral's E=8 on a 16-way model axis would otherwise leave
+        # 540 GB of expert weights only 16-way sharded (33 GB/chip, OOM).
+        spec = [None] * nd
+        out_proj = path.endswith("w_down")
+        if _maybe(mesh, model_axis, shape[-3]):
+            spec[-3] = model_axis
+            spec[-2] = _maybe(mesh, data_axis, shape[-2])
+        elif out_proj:   # contract wide dim over model (see below)
+            spec[-2] = _maybe(mesh, model_axis, shape[-2])
+            spec[-1] = _maybe(mesh, data_axis, shape[-1])
+        else:
+            spec[-2] = _maybe(mesh, data_axis, shape[-2])
+            spec[-1] = _maybe(mesh, model_axis, shape[-1])
+        return P(*spec)
+    if path.endswith("embed") and nd == 2:       # [V, d]
+        # vocab dim deliberately NOT sharded: XLA's gather partitioning on a
+        # vocab-sharded table crashes under partial-manual shard_map (see
+        # DESIGN.md); feature dim over model is the pass-through case.
+        return P(None, _maybe(mesh, model_axis, shape[1]))
+    if nd >= 2 and shape[-1] >= 128 and shape[-2] >= 128:
+        # Megatron-style axis alternation: INPUT projections contract d_model
+        # (shard it over data -> FSDP-ish) and expand over model; OUTPUT
+        # projections (w_down / wo / out...) contract the wide dim — shard it
+        # over MODEL so the matmul partial-sums locally instead of
+        # all-gathering [B,S,d_ff]-sized activations (measured; §Perf iter 5).
+        out_proj = any(path.endswith(sfx) for sfx in
+                       ("w_down", "wo", "out_proj", "rg/out", "dt_proj"))
+        a, b = (model_axis, data_axis) if out_proj else (data_axis, model_axis)
+        spec = [None] * nd
+        spec[-2] = _maybe(mesh, a, shape[-2])
+        spec[-1] = _maybe(mesh, b, shape[-1])
+        return P(*spec)
+    if nd >= 1 and shape[-1] >= 1024:            # wide vectors (A_log, D, ...)
+        spec = [None] * nd
+        spec[-1] = _maybe(mesh, model_axis, shape[-1])
+        return P(*spec)
+    return P()
+
+
+def params_shardings(mesh: Mesh, params: PyTree, **kw) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(NamedSharding(mesh, param_spec(mesh, key, leaf.shape, **kw)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_spec(mesh: Mesh, shape: Tuple[int, ...],
+               batch_axes=("pod", "data")) -> P:
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    if not axes:
+        return P()
+    total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    if shape[0] % total != 0:
+        # fall back to axes that divide
+        for sub in (("data",), ()):
+            t = int(np.prod([_axis_size(mesh, a) for a in sub])) if sub else 1
+            if shape[0] % t == 0:
+                return P(sub if sub else None)
+    return P(axes)
+
+
+def batch_shardings(mesh: Mesh, batch: PyTree, batch_axes=("pod", "data")) -> PyTree:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, leaf.shape, batch_axes)),
+        batch)
+
+
+def strip_axes(spec: P, banned: Tuple[str, ...]) -> P:
+    """Remove manual (worker) axes from a spec — constraints inside a
+    partial-manual shard_map may only reference auto axes."""
+    def clean(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a not in banned)
+            return kept if kept else None
+        return None if e in banned else e
+    return P(*(clean(e) for e in spec))
+
+
+def layer_constraint_fn(mesh: Mesh, banned_axes: Tuple[str, ...] = ()):
+    """Build Model.layer_constraint: pins each per-layer param slice to the
+    policy sharding (stacked spec minus the leading layer dim) so GSPMD keeps
+    scan xs sharded through the loop boundary (per-iteration gathers)."""
+    def constrain(p_slice):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(p_slice)
+        out = []
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            stacked = param_spec(mesh, key, (0,) + tuple(leaf.shape))
+            spec = P(*tuple(stacked)[1:]) if len(tuple(stacked)) > 1 else P()
+            spec = strip_axes(P(*(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))))),
+                              banned_axes)
+            out.append(jax.lax.with_sharding_constraint(leaf, spec))
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return constrain
+
+
+def act_constraint_fn(mesh: Mesh, banned_axes: Tuple[str, ...] = (),
+                      batch_axes=("pod", "data")):
+    """Anchor activations [B, S, d]: batch over the (non-manual) data axes."""
+    axes = tuple(a for a in batch_axes
+                 if a in mesh.axis_names and a not in banned_axes)
+
+    def constrain(x):
+        if not axes or x.ndim < 2 or x.shape[0] % int(
+                np.prod([_axis_size(mesh, a) for a in axes])):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(axes, *([None] * (x.ndim - 1))))
+    return constrain
+
+
+def cache_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               batch_axes=("pod", "data")) -> P:
+    """KV caches [L, B, CL, KV, hd] -> batch over data axes, heads over model;
+    SSM states [L, B, ...] -> batch over data, channels over model."""
+    nd = len(shape)
+    if nd >= 2:
+        spec = [None] * nd
+        b_ax = tuple(a for a in batch_axes if a in mesh.axis_names)
+        total = int(np.prod([_axis_size(mesh, a) for a in b_ax])) if b_ax else 1
+        if b_ax and shape[1] % total == 0:
+            spec[1] = b_ax
+        elif "data" in mesh.axis_names and shape[1] % _axis_size(mesh, "data") == 0:
+            spec[1] = "data"
+        # widest trailing dim over model
+        cand = int(np.argmax(shape[2:])) + 2 if nd > 2 else None
+        if cand is not None:
+            spec[cand] = _maybe(mesh, "model", shape[cand])
+        return P(*spec)
+    return P()
+
+
+def cache_shardings(mesh: Mesh, cache: PyTree, **kw) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(NamedSharding(mesh, cache_spec(mesh, key, leaf.shape, **kw)))
+    return jax.tree_util.tree_unflatten(treedef, out)

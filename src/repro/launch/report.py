@@ -1,0 +1,45 @@
+"""Render the §Roofline markdown table from dryrun_results.json.
+
+  PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import markdown_table
+
+
+def main(path: str):
+    rows = json.load(open(path))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skip = [r for r in rows if r.get("status") == "skip"]
+    err = [r for r in rows if r.get("status") == "error"]
+
+    # baseline table: single-pod, dist=none
+    base = [r for r in ok if r["mesh"] == "pod" and r["dist"] == "none"]
+    print("### Baseline roofline — single-pod (16x16 = 256 chips)\n")
+    print(markdown_table(sorted(base, key=lambda r: (r["arch"], r["shape"]))))
+    print("\n### Multi-pod (2x16x16 = 512 chips) — pod axis proof + Artemis\n")
+    multi = [r for r in ok if r["mesh"] == "multipod"]
+    print(markdown_table(sorted(multi, key=lambda r: (r["arch"], r["shape"],
+                                                      r["dist"]))))
+    print("\n### Skips\n")
+    for r in skip:
+        if r["mesh"] == "pod":
+            print(f"* {r['arch']} x {r['shape']}: {r['reason']}")
+    if err:
+        print("\n### ERRORS\n")
+        for r in err:
+            print(f"* {r['arch']} x {r['shape']} x {r['mesh']} x {r['dist']}")
+    # peak memory check
+    print("\n### Peak bytes/device (fits 16 GiB v5e?)\n")
+    worst = sorted(ok, key=lambda r: -(r["memory_analysis"]["peak_bytes"] or 0))[:8]
+    for r in worst:
+        pk = r["memory_analysis"]["peak_bytes"] / 2**30
+        print(f"* {r['arch']} x {r['shape']} x {r['mesh']} x {r['dist']}: "
+              f"{pk:.2f} GiB {'OK' if pk < 16 else 'OVER'}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

@@ -1,0 +1,125 @@
+"""Training driver.
+
+Runs real steps on whatever devices exist (CPU host mesh for local runs; the
+production mesh on a real cluster).  Supports every Artemis variant over a
+configurable worker axis, checkpointing, and loss logging.
+
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b --reduced \
+      --steps 100 --batch 8 --seq 128 --dist artemis --workers data
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import checkpointer
+from repro.core import dist
+from repro.data.pipeline import ShardedBatches
+from repro.data.synthetic import TokenStream, TokenStreamConfig
+from repro.launch import mesh as M
+from repro.models.model import build_model
+from repro.optim import adam, sgd
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adam", choices=["sgd", "adam"])
+    ap.add_argument("--dist", default="none",
+                    choices=["none"] + list(dist.VARIANTS))
+    ap.add_argument("--workers", default="data", help="worker axis name")
+    ap.add_argument("--s", type=int, default=1, help="quantization levels")
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="communicate every k steps (grad accumulation)")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape, e.g. 4x2 => data=4, model=2")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = M.make_host_mesh()
+
+    dcfg = None
+    if args.dist != "none":
+        dcfg = dist.DistConfig(worker_axes=(args.workers,), variant=args.dist,
+                               s=args.s, p_participation=args.participation,
+                               local_steps=args.local_steps)
+
+    opt = adam(args.lr) if args.optimizer == "adam" else sgd(args.lr)
+    params = model.init(jax.random.PRNGKey(0))
+    pshard = M.params_shardings(mesh, params)
+    banned = dcfg.worker_axes if dcfg else ()
+    model.set_sharding(M.layer_constraint_fn(mesh, banned),
+                       M.act_constraint_fn(mesh, banned))
+    gspecs = (jax.tree.map(lambda ns: M.strip_axes(ns.spec, banned), pshard)
+              if dcfg else None)
+    init_state, step_fn = dist.make_train_step(model, opt, dcfg, mesh,
+                                               grad_specs=gspecs)
+    local_fn = (dist.make_local_step(model, dcfg, mesh)
+                if dcfg and dcfg.local_steps > 1 else None)
+
+    stream = TokenStream(TokenStreamConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch=args.batch))
+    batches = ShardedBatches(stream, mesh, batch_axes=(args.workers, "data"))
+
+    with jax.set_mesh(mesh):
+        params = jax.device_put(params, pshard)
+        state = init_state(params)
+        jstep = jax.jit(step_fn)
+        if args.ckpt_dir and checkpointer.latest_step(args.ckpt_dir) is not None:
+            state = checkpointer.restore(args.ckpt_dir, state)
+            print(f"restored step {int(state.step)}")
+
+        logs = []
+        t0 = time.time()
+        jlocal = jax.jit(local_fn) if local_fn else None
+        for i in range(args.steps):
+            batch = batches.batch_at(i)
+            if jlocal is not None and (i + 1) % args.local_steps:
+                state, (loss, metrics) = jlocal(state, batch)
+            else:
+                state, (loss, metrics) = jstep(state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                loss_f = float(loss)
+                rec = {"step": int(state.step), "loss": round(loss_f, 4),
+                       "nll": round(float(metrics["nll"]), 4),
+                       "wall_s": round(time.time() - t0, 1)}
+                logs.append(rec)
+                print(rec)
+                assert np.isfinite(loss_f), "loss diverged"
+            if (args.ckpt_every and args.ckpt_dir
+                    and int(state.step) % args.ckpt_every == 0):
+                checkpointer.save(args.ckpt_dir, int(state.step), state)
+        if args.ckpt_dir:
+            checkpointer.save(args.ckpt_dir, int(state.step), state)
+    if args.log_file:
+        with open(args.log_file, "w") as f:
+            json.dump(logs, f, indent=1)
+    return logs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, sort/scatter dispatch.
+
+Dispatch never materializes a one-hot [T, E, C] tensor (impossible at
+32k x 32 shapes): token assignments are argsorted by expert id, ranked within
+their expert via a cummax segment trick, and scattered into an [E*C, d]
+buffer that feeds a grouped einsum against the stacked expert weights.
+Dropped tokens (beyond capacity) pass through the residual only — standard
+capacity-factor semantics.
+
+The routing is natively batched over groups (NOT vmapped) so each
+intermediate can carry an explicit sharding anchor: groups over 'data',
+routing feature dims replicated, experts over 'model' for the grouped
+einsum.  Without the anchors XLA's SPMD partitioner shards the
+gather/scatter index dims and CHECK-crashes under partial-manual shard_map
+(see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+# Optional sharding anchors (set by the launcher via set_moe_sharding).
+_MOE_AXES = {"enabled": False, "data": "data", "model": "model"}
+
+
+def set_moe_sharding(enabled: bool, data_axis="data", model_axis="model"):
+    _MOE_AXES.update(enabled=enabled, data=data_axis, model=model_axis)
+
+
+def _anchor(x, spec):
+    if not _MOE_AXES["enabled"]:
+        return x
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) if mesh else {}
+
+    def ok(entry, dim):
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 0) or 10**9
+        return dim % n == 0
+
+    clean = tuple(e if e is None or ok(e, x.shape[i]) else None
+                  for i, e in enumerate(spec))
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+_D = lambda: (_MOE_AXES["data"],)   # noqa: E731
+_M = lambda: _MOE_AXES["model"]     # noqa: E731
+
+
+def init_moe(key, d_model, d_ff, n_experts, activation, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init(ks[0], (d_model, n_experts), scale=0.02, dtype=jnp.float32),
+        "w_up": _init(ks[1], (n_experts, d_model, d_ff), dtype=dtype),
+        "w_down": _init(ks[2], (n_experts, d_ff, d_model), dtype=dtype),
+    }
+    if activation == "silu":
+        p["w_gate"] = _init(ks[3], (n_experts, d_model, d_ff), dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Gather-free dispatch/combine with scatter-only custom VJPs.
+#
+# XLA's SPMD partitioner CHECK-crashes when evaluating gather strategies for
+# computed indices on sharded operands inside a partial-manual shard_map —
+# including the gathers autodiff creates as scatter TRANSPOSES.  Both
+# directions are therefore written as scatters, using precomputed inverse
+# maps (index-of-slot / slots-of-token).
+# ---------------------------------------------------------------------------
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=())
+def _dispatch(updates, slot, inv_slot):
+    """buf[g, slot[g,i]] = updates[g,i].  updates: [G,TK,d], slot: [G,TK]
+    (overflow slot = cap1-1), inv_slot: [G,cap1] (sentinel TK).  -> [G,cap1,d]
+    """
+    g, tk, d = updates.shape
+    cap1 = inv_slot.shape[1]
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tk))
+    return jnp.zeros((g, cap1, d), updates.dtype).at[g_idx, slot].set(updates)
+
+
+def _dispatch_fwd(updates, slot, inv_slot):
+    return _dispatch(updates, slot, inv_slot), (slot, inv_slot, updates.shape)
+
+
+def _dispatch_bwd(res, ct_buf):
+    slot, inv_slot, (g, tk, d) = res
+    cap1 = inv_slot.shape[1]
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, cap1))
+    # transpose as a SCATTER: ct_updates[inv_slot[s]] = ct_buf[s]
+    ct_up = jnp.zeros((g, tk + 1, d), ct_buf.dtype).at[g_idx, inv_slot].set(ct_buf)
+    return ct_up[:, :tk], None, None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _combine(y, w_of_slot, tok_of_slot, slots_of_tok, t):
+    """out[g, tok_of_slot[g,s]] += y[g,s] * w_of_slot[g,s].
+
+    y: [G,cap1,d]; tok_of_slot: [G,cap1] (sentinel t); slots_of_tok: [G,T,K]
+    (sentinel cap1-1, the overflow slot).  -> [G,T,d]
+    """
+    g, cap1, d = y.shape
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, cap1))
+    out = jnp.zeros((g, t + 1, d), y.dtype).at[g_idx, tok_of_slot].add(
+        y * w_of_slot[..., None])
+    return out[:, :t]
+
+
+def _combine_fwd(y, w_of_slot, tok_of_slot, slots_of_tok, t):
+    return (_combine(y, w_of_slot, tok_of_slot, slots_of_tok, t),
+            (y, w_of_slot, slots_of_tok))
+
+
+def _combine_bwd(t, res, ct_out):
+    y, w_of_slot, slots_of_tok = res
+    g, cap1, d = y.shape
+    tt, k = slots_of_tok.shape[1:]
+    # ct at each slot = ct_out at its token — via a SCATTER over (t, k):
+    ct_tk = jnp.broadcast_to(ct_out[:, :, None, :], (g, tt, k, d)
+                             ).reshape(g, tt * k, d)
+    flat_slots = slots_of_tok.reshape(g, tt * k)
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tt * k))
+    ct_slots = jnp.zeros((g, cap1, d), ct_out.dtype).at[g_idx, flat_slots].set(ct_tk)
+    # overflow slot (cap1-1) accumulates trash via collisions -> zero it
+    ct_slots = ct_slots.at[:, cap1 - 1].set(0.0)
+    ct_y = ct_slots * w_of_slot[..., None]
+    ct_w = jnp.sum(ct_slots * y, axis=-1)
+    return ct_y, ct_w, None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def _route_grouped(p, xg, *, top_k: int, capacity: int, activation: str):
+    """xg: [G, T, d] -> ([G, T, d], router probs [G, T, E]).
+
+    GATHER-FREE dispatch/combine (see block comment above): ranks come from a
+    one-hot exclusive cumsum (no sort), dispatch and combine are scatters
+    with scatter-only custom VJPs.
+    """
+    g, t, d = xg.shape
+    n_experts = p["router"].shape[1]
+    tk = t * top_k
+    cap1 = n_experts * capacity + 1          # +1 overflow slot
+
+    logits = xg.astype(jnp.float32) @ p["router"]              # [G,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)                    # [G,T,K]
+    gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(xg.dtype)
+
+    e_flat = _anchor(idx.reshape(g, tk), (_D(), None))         # [G,TK]
+    gate_flat = gate.reshape(g, tk)
+    # rank within expert via exclusive cumsum of the expert one-hot
+    onehot = (e_flat[..., None] == jnp.arange(n_experts)[None, None, :]
+              ).astype(jnp.int32)                              # [G,TK,E]
+    prior = jnp.cumsum(onehot, axis=1) - onehot
+    rank = jnp.sum(onehot * prior, axis=-1)                    # [G,TK]
+    keep = rank < capacity
+    slot = _anchor(jnp.where(keep, e_flat * capacity + rank, cap1 - 1),
+                   (_D(), None))
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tk))
+
+    # inverse maps (int scatters; no gradients flow through these)
+    inv_slot = jnp.full((g, cap1), tk, jnp.int32).at[g_idx, slot].set(
+        jnp.broadcast_to(jnp.arange(tk)[None, :], (g, tk)))
+    inv_slot = inv_slot.at[:, cap1 - 1].set(tk)     # overflow -> trash row
+    tok_flat = jnp.broadcast_to(jnp.arange(tk)[None, :] // top_k, (g, tk))
+    tok_of_slot = jnp.full((g, cap1), t, jnp.int32).at[g_idx, slot].set(tok_flat)
+    tok_of_slot = tok_of_slot.at[:, cap1 - 1].set(t)
+    slots_of_tok = jnp.where(keep, slot, cap1 - 1).reshape(g, t, top_k)
+
+    # dispatch: pure broadcast (x repeated K times) + scatter
+    updates = jnp.broadcast_to(xg[:, :, None, :], (g, t, top_k, d)
+                               ).reshape(g, tk, d)
+    updates = updates * keep[..., None].astype(xg.dtype)
+    buf = _dispatch(updates, slot, inv_slot)
+    eb = buf[:, :-1].reshape(g, n_experts, capacity, d)
+    eb = _anchor(eb, (_D(), _M(), None, None))                 # expert parallel
+
+    if activation == "silu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", eb, p["w_gate"])) * \
+            jnp.einsum("gecd,edf->gecf", eb, p["w_up"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", eb, p["w_up"]))
+    else:
+        h = jnp.square(jax.nn.relu(jnp.einsum("gecd,edf->gecf", eb, p["w_up"])))
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"]).reshape(g, -1, d)
+    y = _anchor(jnp.concatenate([y, jnp.zeros((g, 1, d), y.dtype)], axis=1),
+                (_D(), None, None))                            # [G,cap1,d]
+
+    # combine via inverse maps (scatter-only custom VJP); the gate weights
+    # are dispatched the same way so their gradient reaches the router
+    w_of_slot = _dispatch((gate_flat * keep.astype(xg.dtype))[..., None],
+                          slot, inv_slot)[..., 0]
+    out = _combine(y, w_of_slot, tok_of_slot, slots_of_tok, t)
+    return _anchor(out, (_D(), None, None)), probs
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              activation: str = "silu", group_size: int = 4096):
+    """x: [B, S, d]. Routes per group of <= group_size tokens (per row when
+    S >= group_size, else over the flattened batch).
+
+    Returns (out, aux_loss) where aux_loss is the load-balance loss.
+    """
+    b, s, d = x.shape
+    n_experts = p["router"].shape[1]
+
+    if s >= group_size and s % group_size == 0:
+        xg = x.reshape(b * (s // group_size), group_size, d)
+    else:
+        xg = x.reshape(1, b * s, d)
+    tokens_per_group = xg.shape[1]
+    capacity = max(int(tokens_per_group * top_k / n_experts * capacity_factor),
+                   top_k)
+
+    xg = _anchor(xg, (_D(), None, None))
+    out, probs = _route_grouped(p, xg, top_k=top_k, capacity=capacity,
+                                activation=activation)
+    out = out.reshape(b, s, d)
+    # load-balance aux loss (Switch-style smooth proxy)
+    me = jnp.mean(probs, axis=(0, 1))
+    aux = n_experts * jnp.sum(me * me)
+    return out, aux.astype(jnp.float32)

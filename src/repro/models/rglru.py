@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Like the SSM block, training uses a chunked associative scan; decode is O(1).
+The full "recurrent block" wraps the RG-LRU with a short depthwise conv and a
+gated linear unit, per the Griffin paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+C_CONST = 8.0
+
+
+def init_rglru(key, d_model, lru_width, d_conv=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": _init(ks[0], (d_model, lru_width), dtype=dtype),
+        "in_gate": _init(ks[1], (d_model, lru_width), dtype=dtype),
+        "conv_w": _init(ks[2], (d_conv, lru_width), scale=0.5, dtype=dtype),
+        "w_r": _init(ks[3], (lru_width, lru_width), dtype=dtype),
+        "w_i": _init(ks[4], (lru_width, lru_width), dtype=dtype),
+        # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[5], (lru_width,), jnp.float32,
+                                        0.9, 0.999)) / C_CONST)),
+        "out": _init(ks[6], (lru_width, d_model), dtype=dtype),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc @ p["w_r"])
+    i = jax.nn.sigmoid(xc @ p["w_i"])
+    decay = jax.nn.softplus(p["lam"]).astype(jnp.float32)
+    log_a = -C_CONST * decay * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    drive = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = drive * (i * xc).astype(jnp.float32)
+    return a, bx
+
+
+def rglru_apply(p, x, *, chunk=256, state=None):
+    """x: [B, S, d_model]. Returns (y, new_state or None); state as in ssm.py."""
+    b, s, d = x.shape
+    lw = p["out"].shape[0]
+    xi = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    conv_w = p["conv_w"].astype(x.dtype)
+    k = conv_w.shape[0]
+
+    if state is None:
+        pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+        xc = sum(pad[:, i:i + s] * conv_w[i] for i in range(k))
+        a, bx = _gates(p, xc)
+        h0 = jnp.zeros((b, lw), jnp.float32)
+
+        def comb(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, a2 * b1 + b2
+
+        if s % chunk == 0 and s > chunk:
+            n = s // chunk
+            a_c = a.reshape(b, n, chunk, lw).swapaxes(0, 1)
+            bx_c = bx.reshape(b, n, chunk, lw).swapaxes(0, 1)
+
+            def body(h, ab):
+                aa, hh = jax.lax.associative_scan(comb, (ab[0], ab[1]), axis=1)
+                hh = hh + aa * h[:, None]
+                return hh[:, -1], hh
+            _, hs = jax.lax.scan(body, h0, (a_c, bx_c))
+            h_all = hs.swapaxes(0, 1).reshape(b, s, lw)
+        else:
+            aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=1)
+            h_all = hh + aa * h0[:, None]
+        y = h_all.astype(x.dtype)
+        new_state = None
+    else:
+        window = jnp.concatenate([state["conv"], xi], axis=1)
+        xc = jnp.einsum("bkd,kd->bd", window, conv_w)[:, None]
+        a, bx = _gates(p, xc)
+        h = a[:, 0] * state["h"] + bx[:, 0]
+        y = h.astype(x.dtype)[:, None]
+        new_state = {"conv": window[:, 1:], "h": h}
+
+    return (y * gate) @ p["out"], new_state
+
+
+def init_rglru_state(b, lru_width, d_conv=4, dtype=jnp.float32):
+    return {"conv": jnp.zeros((b, d_conv - 1, lru_width), dtype),
+            "h": jnp.zeros((b, lru_width), jnp.float32)}

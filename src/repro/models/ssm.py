@@ -1,0 +1,123 @@
+"""Mamba-1 selective SSM block (falcon-mamba architecture).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a *chunked associative
+scan* — ``lax.scan`` over sequence chunks with a parallel
+``lax.associative_scan`` inside each chunk, so the materialized state tensor
+is [B, chunk, d_inner, d_state] instead of [B, S, d_inner, d_state]
+(intractable at 4k x 8192 x 16).  Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+
+def d_inner(d_model, expand=2):
+    return expand * d_model
+
+
+def dt_rank(d_model):
+    return -(-d_model // 16)
+
+
+def init_mamba(key, d_model, d_state=16, d_conv=4, expand=2, dtype=jnp.float32):
+    di, dr = d_inner(d_model, expand), dt_rank(d_model)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _init(ks[0], (d_model, 2 * di), dtype=dtype),
+        "conv_w": _init(ks[1], (d_conv, di), scale=0.5, dtype=dtype),
+        "x_proj": _init(ks[2], (di, dr + 2 * d_state), dtype=dtype),
+        "dt_proj": _init(ks[3], (dr, di), scale=dr**-0.5, dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d_model), dtype=dtype),
+    }
+
+
+def _ssm_coeffs(p, xc, *, d_state):
+    """xc: [..., S, di] (post-conv). Returns decay a=[...,S,di,N], drive bx."""
+    dr = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]                                   # [..., S, dr+2N]
+    dt = jax.nn.softplus(proj[..., :dr] @ p["dt_proj"]
+                         + p["dt_bias"].astype(xc.dtype))     # [..., S, di]
+    B = proj[..., dr:dr + d_state]                            # [..., S, N]
+    C = proj[..., dr + d_state:]                              # [..., S, N]
+    A = -jnp.exp(p["A_log"]).astype(jnp.float32)              # [di, N]
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)        # [..., S, di, N]
+    bx = (dt * xc)[..., :, :, None] * B[..., :, None, :]      # [..., S, di, N]
+    return a, bx.astype(jnp.float32), C
+
+
+def _chunk_scan(a, bx, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t within one chunk.
+
+    a, bx: [B, L, di, N]; h0: [B, di, N]. Returns (h_all [B, L, di, N], h_last).
+    """
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    hh = hh + aa * h0[:, None]
+    return hh, hh[:, -1]
+
+
+def mamba_apply(p, x, *, d_state=16, chunk=256, state=None):
+    """x: [B, S, d_model]. Train/prefill when state is None (full sequence);
+    decode when S == 1 and state = dict(conv=[B, d_conv-1, di], h=[B, di, N]).
+
+    Returns (y, new_state or None).
+    """
+    b, s, d = x.shape
+    di = p["out_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+
+    conv_w = p["conv_w"].astype(x.dtype)                       # [K, di]
+    k = conv_w.shape[0]
+
+    if state is None:
+        # causal depthwise conv over the sequence
+        pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+        xc = sum(pad[:, i:i + s] * conv_w[i] for i in range(k))
+        xc = jax.nn.silu(xc)
+        a, bx, C = _ssm_coeffs(p, xc, d_state=d_state)
+        h0 = jnp.zeros((b, di, d_state), jnp.float32)
+        if s % chunk == 0 and s > chunk:
+            n = s // chunk
+            a_c = a.reshape(b, n, chunk, di, d_state).swapaxes(0, 1)
+            bx_c = bx.reshape(b, n, chunk, di, d_state).swapaxes(0, 1)
+
+            def body(h, ab):
+                hh, hl = _chunk_scan(ab[0], ab[1], h)
+                return hl, hh
+            _, hs = jax.lax.scan(body, h0, (a_c, bx_c))
+            h_all = hs.swapaxes(0, 1).reshape(b, s, di, d_state)
+        else:
+            h_all, _ = _chunk_scan(a, bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all.astype(x.dtype), C)
+        new_state = None
+    else:
+        # O(1) decode step
+        conv_buf = state["conv"]                               # [B, K-1, di]
+        window = jnp.concatenate([conv_buf, xi], axis=1)       # [B, K, di]
+        xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, conv_w))[:, None]
+        a, bx, C = _ssm_coeffs(p, xc, d_state=d_state)
+        h = a[:, 0] * state["h"] + bx[:, 0]                    # [B, di, N]
+        y = jnp.einsum("bdn,bn->bd", h.astype(x.dtype), C[:, 0])[:, None]
+        new_state = {"conv": window[:, 1:], "h": h}
+
+    y = y + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], new_state
+
+
+def init_mamba_state(b, d_model, d_state=16, d_conv=4, expand=2, dtype=jnp.float32):
+    di = d_inner(d_model, expand)
+    return {"conv": jnp.zeros((b, d_conv - 1, di), dtype),
+            "h": jnp.zeros((b, di, d_state), jnp.float32)}

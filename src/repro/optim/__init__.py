@@ -1,0 +1,1 @@
+from repro.optim.optimizers import Optimizer, adam, sgd, cosine_lr  # noqa: F401

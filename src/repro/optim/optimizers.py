@@ -1,0 +1,77 @@
+"""Minimal functional optimizers (pytree-native, sharding-transparent).
+
+The paper's algorithm is SGD; Adam is provided as the beyond-paper option —
+Artemis composes with either because compression acts on the *gradient
+aggregate* before the optimizer sees it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+    # update(grads, opt_state, step) -> (updates, new_state); caller applies
+    # params - lr_schedule(step) * updates is folded in already.
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tmap(jnp.zeros_like, params)
+
+    def update(grads, state, step, params=None):
+        del step
+        if weight_decay and params is not None:
+            grads = _tmap(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            return _tmap(lambda g: lr * g, grads), ()
+        new_m = _tmap(lambda m, g: momentum * m + g, state, grads)
+        return _tmap(lambda m: lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, step, params=None):
+        t = step.astype(jnp.float32) + 1.0
+        g32 = _tmap(lambda g: g.astype(jnp.float32), grads)
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], g32)
+        mh = _tmap(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = _tmap(lambda v_: v_ / (1 - b2 ** t), v)
+        upd = _tmap(lambda m_, v_: lr * m_ / (jnp.sqrt(v_) + eps), mh, vh)
+        if weight_decay and params is not None:
+            upd = _tmap(lambda u, p: u + lr * weight_decay * p.astype(jnp.float32),
+                        upd, params)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def cosine_lr(base: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base * jnp.where(s < warmup, warm, cos)
+    return sched

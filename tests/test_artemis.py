@@ -1,0 +1,125 @@
+"""Tests of the Artemis round: variant semantics, PP1/PP2, memory dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artemis as art
+
+KEY = jax.random.PRNGKey(0)
+N, D = 8, 16
+
+
+def _round(cfg, grads, state=None, active=None, key=KEY):
+    state = art.init_state(cfg) if state is None else state
+    return art.artemis_round(cfg, state, grads, key, active)
+
+
+def test_sgd_variant_is_plain_mean():
+    cfg = art.variant_config("sgd", D, N)
+    g = jax.random.normal(KEY, (N, D))
+    omega, st, _ = _round(cfg, g)
+    np.testing.assert_allclose(np.asarray(omega), np.asarray(jnp.mean(g, 0)), rtol=1e-6)
+    assert jnp.array_equal(st.h, jnp.zeros((N, D)))   # no memory with alpha=0
+
+
+def test_memory_recursion():
+    """h' = h + alpha*C(g - h); with identity compressor: h' = (1-a)h + a g."""
+    cfg = art.ArtemisConfig(dim=D, n_workers=N, up="identity", dwn="identity", alpha=0.25)
+    g = jax.random.normal(KEY, (N, D))
+    h0 = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    st = art.init_state(cfg)._replace(h=h0, hbar=jnp.mean(h0, 0))
+    omega, st2, _ = _round(cfg, g, state=st)
+    np.testing.assert_allclose(np.asarray(st2.h), np.asarray(0.75 * h0 + 0.25 * g), rtol=1e-5)
+    # full participation, identity: omega == mean(g)
+    np.testing.assert_allclose(np.asarray(omega), np.asarray(jnp.mean(g, 0)), rtol=1e-5)
+
+
+def test_default_alpha():
+    cfg = art.variant_config("artemis", D, N, s=1)
+    c_up, _ = cfg.compressors()
+    assert cfg.resolved_alpha() == pytest.approx(1.0 / (2 * (c_up.omega + 1)))
+    assert art.variant_config("sgd", D, N).resolved_alpha() == 0.0
+
+
+def test_unbiased_aggregate():
+    """E[omega] == mean(g) over compression randomness (full participation)."""
+    cfg = art.variant_config("artemis", D, N, s=1)
+    g = jax.random.normal(KEY, (N, D))
+    st = art.init_state(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(2), 3000)
+    omegas = jax.vmap(lambda k: art.artemis_round(cfg, st, g, k)[0])(keys)
+    np.testing.assert_allclose(np.asarray(jnp.mean(omegas, 0)),
+                               np.asarray(jnp.mean(g, 0)), atol=0.15)
+
+
+def test_pp2_uses_memory_of_inactive():
+    """PP2's ghat includes hbar built from ALL workers even when some inactive."""
+    cfg = art.ArtemisConfig(dim=D, n_workers=N, up="identity", dwn="identity",
+                            alpha=0.5, p=0.5, pp_mode="pp2")
+    g = jnp.ones((N, D))
+    st0 = art.init_state(cfg)
+    # round 1: all active -> hbar becomes alpha*mean(delta) = 0.5*1
+    omega1, st1, _ = _round(cfg, g, state=st0, active=jnp.ones(N))
+    np.testing.assert_allclose(np.asarray(st1.hbar), 0.5 * np.ones(D), rtol=1e-6)
+    # round 2: NO workers active -> ghat = hbar exactly
+    omega2, st2, _ = _round(cfg, g, state=st1, active=jnp.zeros(N))
+    np.testing.assert_allclose(np.asarray(omega2), np.asarray(st1.hbar), rtol=1e-6)
+    # inactive memories untouched
+    np.testing.assert_allclose(np.asarray(st2.h), np.asarray(st1.h))
+
+
+def test_pp1_vs_pp2_full_participation_equal():
+    """With p=1 and all active, PP1 == PP2 (identical ghat)."""
+    g = jax.random.normal(KEY, (N, D))
+    outs = {}
+    for mode in ["pp1", "pp2"]:
+        cfg = art.ArtemisConfig(dim=D, n_workers=N, up="identity", dwn="identity",
+                                alpha=0.3, p=1.0, pp_mode=mode)
+        st = art.init_state(cfg)
+        # two rounds to engage memories
+        omega, st, _ = _round(cfg, g, state=st)
+        omega, st, _ = _round(cfg, 2 * g, state=st, key=jax.random.PRNGKey(9))
+        outs[mode] = np.asarray(omega)
+    np.testing.assert_allclose(outs["pp1"], outs["pp2"], rtol=1e-5)
+
+
+def test_pp1_noise_at_optimum():
+    """PP1 with p<1 has non-zero variance even with zero-mean heterogeneous
+    gradients at the optimum (paper Section 4's failure mode);
+    PP2 with converged memory has none."""
+    # 'gradients at optimum': per-worker fixed vectors summing to zero
+    g = jax.random.normal(KEY, (N, D))
+    g = g - jnp.mean(g, axis=0, keepdims=True)     # sum_i grad_i(w*) = 0
+    p = 0.5
+    base = dict(dim=D, n_workers=N, up="identity", dwn="identity", alpha=0.5, p=p)
+    # memories converged to h_i = grad_i(w*)
+    var = {}
+    for mode in ["pp1", "pp2"]:
+        cfg = art.ArtemisConfig(pp_mode=mode, **base)
+        st = art.init_state(cfg)._replace(h=g, hbar=jnp.mean(g, 0))
+        keys = jax.random.split(KEY, 500)
+        def one(k):
+            act = (jax.random.uniform(k, (N,)) < p).astype(jnp.float32)
+            om, _, _ = art.artemis_round(cfg, st, g, jax.random.fold_in(k, 1), act)
+            return jnp.sum(om ** 2)
+        var[mode] = float(jnp.mean(jax.vmap(one)(keys)))
+    assert var["pp2"] < 1e-10
+    assert var["pp1"] > 1e-2
+
+
+def test_error_feedback_accumulates():
+    cfg = art.ArtemisConfig(dim=D, n_workers=N, up="squant", dwn="identity",
+                            alpha=0.0, error_feedback=True, up_kwargs={"s": 1})
+    g = jax.random.normal(KEY, (N, D))
+    _, st, _ = _round(cfg, g)
+    assert float(jnp.sum(st.e ** 2)) > 0.0
+
+
+def test_bits_stats():
+    cfg = art.variant_config("artemis", D, N, s=1)
+    _, _, stats = _round(cfg, jnp.ones((N, D)))
+    assert stats["uplink_bits"] > 0 and stats["dwnlink_bits"] > 0
+    sgd = art.variant_config("sgd", D, N)
+    _, _, s2 = _round(sgd, jnp.ones((N, D)))
+    assert stats["uplink_bits"] < s2["uplink_bits"]   # compression saves bits

@@ -1,0 +1,120 @@
+"""Unit + property tests for compression operators (Assumption 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mc_unbiasedness_and_variance(c, x, n_samples=2000, tol=0.08):
+    keys = jax.random.split(KEY, n_samples)
+    outs = jax.vmap(lambda k: c(k, x))(keys)
+    mean = jnp.mean(outs, axis=0)
+    err = jnp.mean(jnp.sum((outs - x[None]) ** 2, axis=-1))
+    nx2 = float(jnp.sum(x**2))
+    # unbiased: E[C(x)] = x
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x),
+                               atol=tol * np.sqrt(nx2 / x.size) * 3 + 1e-6)
+    # variance bound: E||C(x)-x||^2 <= omega ||x||^2 (+ mc slack)
+    assert float(err) <= c.omega * nx2 * (1 + tol) + 1e-6, (float(err), c.omega * nx2)
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("squant", {"s": 1}),
+    ("squant", {"s": 4}),
+    ("tile_squant", {"s": 1, "tile": 8}),
+    ("sparsify", {"q": 0.5}),
+    ("sparsify", {"q": 0.25}),
+    ("identity", {}),
+])
+def test_assumption5(name, kwargs):
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(7), (d,))
+    c = comp.make_compressor(name, d, **kwargs)
+    _mc_unbiasedness_and_variance(c, x)
+
+
+def test_identity_exact():
+    c = comp.identity()
+    x = jnp.arange(10.0)
+    assert jnp.array_equal(c(KEY, x), x)
+    assert c.omega == 0.0
+
+
+def test_squant_zero_vector():
+    c = comp.squant(16, s=1)
+    out = c(KEY, jnp.zeros(16))
+    assert jnp.array_equal(out, jnp.zeros(16))
+
+
+def test_squant_levels():
+    """Outputs lie on the s-quantization grid sign*norm*l/s."""
+    d, s = 64, 4
+    x = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    c = comp.squant(d, s)
+    out = np.asarray(c(KEY, x))
+    norm = float(jnp.linalg.norm(x))
+    lv = np.abs(out) / norm * s
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+
+
+def test_sparsify_support():
+    d = 100
+    x = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    c = comp.sparsify(0.3)
+    out = np.asarray(c(KEY, x))
+    nz = out != 0
+    np.testing.assert_allclose(out[nz], np.asarray(x)[nz] / 0.3, rtol=1e-5)
+
+
+def test_omega_formulas():
+    assert comp.squant_omega(100, 1) == pytest.approx(10.0)   # sqrt(d)/s branch
+    assert comp.squant_omega(4, 4) == pytest.approx(0.25)     # d/s^2 branch
+    assert comp.sparsify(0.25).omega == pytest.approx(3.0)    # 1/q - 1
+
+
+def test_bits_ordering():
+    """1-quantization ~ O(sqrt(d) log d) bits << 32 d (paper A.1)."""
+    d = 4096
+    c = comp.squant(d, s=1)
+    assert c.bits(d) < 32 * d / 4
+
+
+def test_shapes_preserved():
+    c = comp.tile_squant(tile=128, s=1)
+    x = jax.random.normal(KEY, (3, 5, 7))
+    assert c(KEY, x).shape == (3, 5, 7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 8), st.integers(0, 10**6))
+def test_squant_grid_property(d, s, seed):
+    """Property: every squant output coordinate is a valid grid point with
+    level <= ceil(s) + 1 and correct sign."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    c = comp.squant(d, s)
+    out = np.asarray(c(jax.random.PRNGKey(seed + 1), x))
+    norm = float(jnp.linalg.norm(x))
+    lv = np.abs(out) / norm * s
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-3)
+    assert (lv <= s + 1 + 1e-3).all()
+    sign_mismatch = (np.sign(out) != 0) & (np.sign(out) != np.sign(np.asarray(x)))
+    assert not sign_mismatch.any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["squant", "tile_squant", "sparsify"]),
+       st.integers(0, 10**6))
+def test_scale_equivariance(name, seed):
+    """C(c*x) distribution == c*C(x) for positive scalars (same key)."""
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    c = comp.make_compressor(name, d)
+    k = jax.random.PRNGKey(seed + 13)
+    a = np.asarray(c(k, 3.0 * x))
+    b = np.asarray(3.0 * c(k, x))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

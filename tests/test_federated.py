@@ -1,0 +1,126 @@
+"""Integration tests: the paper's convergence claims on the simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artemis as art, federated as fed
+from repro.core import compression as comp
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.fixture(scope="module")
+def lsr_noiseless():
+    prob, _ = fed.make_lsr_problem(KEY, n_workers=10, n_per=100, d=20, noise=0.0)
+    return prob
+
+
+@pytest.fixture(scope="module")
+def lsr_noisy():
+    prob, _ = fed.make_lsr_problem(KEY, n_workers=10, n_per=100, d=20, noise=0.4)
+    return prob
+
+
+def test_linear_convergence_sigma_star_zero(lsr_noiseless):
+    """Thm 1: sigma_*=0 => linear convergence for ALL variants (E=0 floor)."""
+    for variant in ["sgd", "qsgd", "diana", "biqsgd"]:
+        cfg = art.variant_config(variant, 20, 10)
+        g = fed.gamma_max(lsr_noiseless, cfg)
+        r = fed.run(lsr_noiseless, cfg, gamma=g, iters=400, key=KEY, batch=8)
+        assert r.losses[-1] < 1e-5, (variant, r.losses[-1])
+
+
+def test_saturation_ordering_sigma_star_nonzero(lsr_noisy):
+    """Fig 3a: with sigma_* != 0 all algorithms saturate; double compression
+    saturates higher than single, higher than SGD (at a shared step size)."""
+    gamma = 1.0 / (4 * lsr_noisy.smoothness())
+    floors = {}
+    for variant in ["sgd", "qsgd", "biqsgd"]:
+        cfg = art.variant_config(variant, 20, 10)
+        r = fed.run(lsr_noisy, cfg, gamma=gamma, iters=600, key=KEY, batch=1)
+        floors[variant] = float(np.mean(r.losses[-100:]))
+    opt = float(lsr_noisy.global_loss(lsr_noisy.solve_opt()))
+    assert floors["sgd"] - opt < floors["qsgd"] - opt < floors["biqsgd"] - opt
+
+
+def test_memory_helps_non_iid():
+    """Fig 3b / S9: non-i.i.d. full-batch (sigma_*=0): memory converges
+    linearly, memoryless bidirectional saturates at a high level."""
+    prob = fed.make_logistic_problem(jax.random.PRNGKey(3), n_workers=10, n_per=200, d=2)
+    gamma = 1.0 / (2 * prob.smoothness())
+    res = {}
+    for variant in ["artemis", "biqsgd"]:
+        cfg = art.variant_config(variant, 2, 10)
+        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
+        res[variant] = r
+    opt = float(prob.global_loss(prob.solve_opt()))
+    exc_mem = res["artemis"].losses[-1] - opt
+    exc_nomem = res["biqsgd"].losses[-1] - opt
+    assert exc_mem < exc_nomem / 5, (exc_mem, exc_nomem)
+
+
+def test_pp2_beats_pp1():
+    """Fig 5/6: partial participation, full gradients, non-iid: PP1 saturates,
+    PP2 converges linearly."""
+    prob = fed.make_logistic_problem(jax.random.PRNGKey(5), n_workers=10, n_per=200, d=2)
+    gamma = 1.0 / (2 * prob.smoothness())
+    res = {}
+    for mode in ["pp1", "pp2"]:
+        cfg = art.ArtemisConfig(dim=2, n_workers=10, up="identity", dwn="identity",
+                                alpha=0.5, p=0.5, pp_mode=mode)
+        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
+        res[mode] = float(np.mean(r.losses[-50:]))
+    opt = float(prob.global_loss(prob.solve_opt()))
+    assert res["pp2"] - opt < (res["pp1"] - opt) / 5, res
+
+
+def test_bidirectional_bit_savings(lsr_noiseless):
+    """App A.1: bi-compression ~ O(sqrt(d) log d) per direction vs O(d)."""
+    bits = {}
+    for variant in ["sgd", "artemis"]:
+        cfg = art.variant_config(variant, 20, 10)
+        r = fed.run(lsr_noiseless, cfg, gamma=0.01, iters=50, key=KEY, batch=4)
+        bits[variant] = r.bits[-1]
+    assert bits["artemis"] < bits["sgd"] / 2
+
+
+def test_polyak_ruppert_tail_average(lsr_noisy):
+    """Thm 2 (qualitatively): once in the stationary regime, averaging reduces
+    the excess loss vs the oscillating last iterate."""
+    cfg = art.variant_config("qsgd", 20, 10)
+    g = 1.0 / (3 * lsr_noisy.smoothness())   # large step -> fast saturation
+    r = fed.run(lsr_noisy, cfg, gamma=g, iters=1500, key=KEY, batch=1)
+    opt = float(lsr_noisy.global_loss(lsr_noisy.solve_opt()))
+    tail_exc = float(lsr_noisy.global_loss(jnp.asarray(r.w_tail_avg))) - opt
+    last_exc = float(np.mean(r.losses[-200:])) - opt
+    assert tail_exc <= last_exc * 1.05 + 1e-8, (tail_exc, last_exc)
+
+
+def test_gamma_max_formulas(lsr_noisy):
+    """No-compression gamma_max recovers ~1/L-scale SGD bound (Table 3)."""
+    sgd = art.variant_config("sgd", 20, 10)
+    g_sgd = fed.gamma_max(lsr_noisy, sgd)
+    L = lsr_noisy.smoothness()
+    assert 0.2 / L < g_sgd <= 1.0 / L
+    bi = art.variant_config("artemis", 20, 10)
+    assert fed.gamma_max(lsr_noisy, bi) < g_sgd   # compression shrinks gamma_max
+
+
+def test_catchup_bit_metering():
+    """Remark 3: an absent worker pays missed*M2 bits on return, capped at
+    M1 (the full model) once it has been away longer than floor(M1/M2)."""
+    prob, _ = fed.make_lsr_problem(KEY, n_workers=8, n_per=50, d=20, noise=0.0)
+    # full participation vs p=0.3: the PP run pays catch-up on top of uplink
+    cfg_full = art.variant_config("artemis", 20, 8, p=1.0)
+    cfg_pp = art.variant_config("artemis", 20, 8, p=0.3)
+    r_full = fed.run(prob, cfg_full, gamma=0.01, iters=100, key=KEY, batch=4)
+    r_pp = fed.run(prob, cfg_pp, gamma=0.01, iters=100, key=KEY, batch=4)
+    # fewer active workers -> less uplink, but catch-up bits are bounded by
+    # M1 per return, so total stays within [0, full-participation total]
+    assert 0 < r_pp.bits[-1] < r_full.bits[-1] * 1.5
+    # catch-up bound sanity: per-round bits never exceed N*(uplink + M1)
+    per_round = np.diff(r_pp.bits)
+    c_up, _ = cfg_pp.compressors()
+    cap = 8 * (c_up.bits(20) + comp.FP_BITS * 20)
+    assert (per_round <= cap + 1e-6).all()

@@ -1,0 +1,161 @@
+"""Layer-level correctness: chunked attention/xent vs naive, scan chunking of
+SSM/RG-LRU vs step-by-step recurrence, RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- attention -----------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    kk = jnp.repeat(k, rep, 2)
+    vv = jnp.repeat(v, rep, 2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / jnp.sqrt(d)
+    i = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i[:, None] >= i[None, :]
+    if window:
+        mask &= (i[:, None] - i[None, :]) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("q_chunk", [8, 32, 128])
+def test_chunked_attention_matches_naive(window, q_chunk):
+    b, s, h, kv, d = 2, 64, 4, 2, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+    pos = jnp.arange(s)[None].repeat(b, 0)
+    out = L.attention(q, k, v, pos, pos, window=window, q_chunk=q_chunk)
+    ref = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_non_causal_attention():
+    b, s, h, d = 1, 16, 2, 8
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    pos = jnp.arange(s)[None].repeat(b, 0)
+    out = L.attention(q, k, v, pos, pos, causal=False, q_chunk=8)
+    ref = _naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+# -- rope -----------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(KEY, (2, 8, 4, 16))
+    pos = jnp.arange(8)[None].repeat(2, 0)
+    y = L.rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = 16
+    q = jax.random.normal(KEY, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def dot(i, j):
+        qi = L.rope(q, jnp.array([[i]]))
+        kj = L.rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+
+    assert dot(5, 3) == pytest.approx(dot(9, 7), rel=1e-4)
+    assert dot(5, 3) != pytest.approx(dot(5, 4), rel=1e-3)
+
+
+# -- chunked xent ----------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 40), st.integers(4, 64), st.integers(0, 1000))
+def test_chunked_xent_matches_naive(s, v, seed):
+    b, d = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 2), (b, s), 0, v)
+    # mask a few labels
+    labels = labels.at[:, 0].set(-1)
+    out = L.chunked_xent(x, w, labels, chunk=16)
+    logits = x @ w
+    logp = jax.nn.log_softmax(logits, -1)
+    gold = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    valid = labels >= 0
+    ref = -jnp.sum(gold * valid) / jnp.sum(valid)
+    np.testing.assert_allclose(float(out), float(ref), rtol=1e-4)
+
+
+# -- SSM / RG-LRU: chunked scan == step-by-step recurrence -------------------------
+
+def test_mamba_chunked_equals_decode_chain():
+    d, b, s = 32, 2, 64
+    p = SSM.init_mamba(KEY, d)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
+    full, _ = SSM.mamba_apply(p, x, chunk=16)
+    st_ = SSM.init_mamba_state(b, d)
+    outs = []
+    for t in range(s):
+        y, st_ = SSM.mamba_apply(p, x[:, t:t + 1], state=st_)
+        outs.append(y)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_rglru_chunked_equals_decode_chain():
+    d, lw, b, s = 32, 32, 2, 64
+    p = RG.init_rglru(KEY, d, lw)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
+    full, _ = RG.rglru_apply(p, x, chunk=16)
+    st_ = RG.init_rglru_state(b, lw)
+    outs = []
+    for t in range(s):
+        y, st_ = RG.rglru_apply(p, x[:, t:t + 1], state=st_)
+        outs.append(y)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_rglru_stability():
+    """|a_t| < 1: long sequences cannot blow up."""
+    d = lw = 16
+    p = RG.init_rglru(KEY, d, lw)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, d))
+    y, _ = RG.rglru_apply(p, x, chunk=64)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(jnp.max(jnp.abs(y))) < 1e3
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 100))
+def test_mamba_state_invariant_chunks(nc, seed):
+    """Property: output independent of the chunk size used for the scan."""
+    d, b = 16, 1
+    s = 32 * nc
+    p = SSM.init_mamba(jax.random.PRNGKey(seed), d)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, d))
+    a, _ = SSM.mamba_apply(p, x, chunk=8)
+    c, _ = SSM.mamba_apply(p, x, chunk=s)       # single chunk
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-3,
+                               atol=2e-4)

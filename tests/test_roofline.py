@@ -1,0 +1,86 @@
+"""Roofline derivation unit tests: HLO collective parsing + flops accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import roofline as R
+
+HLO = """
+  %ag = f32[2,64,128]{2,1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = bf16[1024]{0} all-reduce(%y), to_apply=%sum
+  %cp = s8[32,16]{1,0} collective-permute(%q), source_target_pairs={{0,1}}
+  %rs = f32[512]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w), dimensions={0}
+  %ags = s8[4,4]{1,0} all-gather-start(%v)
+  %agd = s8[4,4]{1,0} all-gather-done(%ags)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = R.collective_bytes(HLO)
+    assert out["all-gather"] == 2 * 64 * 128 * 4 + 4 * 4      # incl. -start
+    assert out["all-reduce"] == 1024 * 2
+    assert out["collective-permute"] == 32 * 16
+    assert out["reduce-scatter"] == 512 * 4
+    assert out["all-to-all"] == 64 * 4
+
+
+def test_shape_bytes_tuple():
+    assert R._shape_bytes("(f32[4,4], s8[8])") == 64 + 8
+
+
+def test_roofline_terms_and_dominant():
+    rl = R.Roofline(arch="a", shape="s", mesh="pod", chips=256, kind="train",
+                    hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                    coll_bytes={"all-reduce": int(50e9 * 0.5)},
+                    model_flops=100e12).finalize()
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(2.0)
+    assert rl.collective_s == pytest.approx(0.5)
+    assert rl.dominant == "memory"
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("olmoe-1b-7b", reduced=True)
+    from repro.models.model import build_model
+    params = jax.eval_shape(lambda: build_model(cfg).init(jax.random.PRNGKey(0)))
+    total = R.count_params(params)
+    active = R.active_params(cfg, params)
+    assert active < total                     # top-2 of 4 experts
+    # expert fraction scales by top_k/n_experts = 1/2
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    expert = sum(int(np.prod(l.shape)) for p, l in flat
+                 if "moe" in "/".join(str(getattr(q, 'key', q)) for q in p)
+                 and "router" not in "/".join(str(getattr(q, 'key', q)) for q in p))
+    assert active == pytest.approx(total - expert + expert * 0.5)
+
+
+def test_model_flops_conventions():
+    cfg = configs.get_config("starcoder2-7b", reduced=True)
+    from repro.models.model import build_model
+    params = jax.eval_shape(lambda: build_model(cfg).init(jax.random.PRNGKey(0)))
+    n = R.active_params(cfg, params)
+    assert R.model_flops(cfg, params, "train", 2, 8) == 6 * n * 16
+    assert R.model_flops(cfg, params, "prefill", 2, 8) == 2 * n * 16
+    assert R.model_flops(cfg, params, "decode", 2, 8) == 2 * n * 2
+
+
+def test_input_specs_shapes():
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        for sname, shape in configs.SHAPES.items():
+            if configs.applicable(cfg, shape):
+                continue
+            specs = configs.input_specs(cfg, shape)
+            if shape.kind in ("train", "prefill"):
+                if cfg.family == "vlm":
+                    assert specs["tokens"].shape == (shape.batch,
+                                                     shape.seq - cfg.n_patches)
+                    assert specs["embeds"].shape[1] == cfg.n_patches
+                else:
+                    assert specs["tokens"].shape == (shape.batch, shape.seq)
+            else:
+                assert specs["token"].shape == (shape.batch,)
+                assert len(jax.tree.leaves(specs["cache"])) > 0

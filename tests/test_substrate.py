@@ -1,0 +1,126 @@
+"""Tests for the supporting subsystems: data, optimizers, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpointer
+from repro.data.synthetic import TokenStream, TokenStreamConfig
+from repro.optim import adam, sgd, cosine_lr
+
+
+# -- data -------------------------------------------------------------------
+
+def test_stream_deterministic():
+    cfg = TokenStreamConfig(vocab=128, seq_len=32, batch=4, seed=7)
+    a = TokenStream(cfg).batch_at(3)["tokens"]
+    b = TokenStream(cfg).batch_at(3)["tokens"]
+    assert jnp.array_equal(a, b)
+    c = TokenStream(cfg).batch_at(4)["tokens"]
+    assert not jnp.array_equal(a, c)
+
+
+def test_stream_bigram_structure():
+    """successor(t) follows t ~bigram_weight of the time."""
+    cfg = TokenStreamConfig(vocab=64, seq_len=512, batch=8, bigram_weight=0.7)
+    s = TokenStream(cfg)
+    toks = np.asarray(s.batch_at(0)["tokens"])
+    follows = (s.successor[toks[:, :-1]] == toks[:, 1:]).mean()
+    assert 0.6 < follows < 0.85, follows
+
+
+def test_stream_range():
+    cfg = TokenStreamConfig(vocab=50, seq_len=64, batch=2)
+    t = np.asarray(TokenStream(cfg).batch_at(0)["tokens"])
+    assert t.min() >= 0 and t.max() < 50
+
+
+# -- optimizers ---------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1), lambda: sgd(0.05, 0.9),
+                                      lambda: adam(0.1)])
+def test_optimizer_quadratic(make_opt):
+    opt = make_opt()
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for i in range(200):
+        grads = {"w": params["w"] - target}
+        upd, state = opt.update(grads, state, jnp.int32(i))
+        params = jax.tree.map(lambda p, u: p - u, params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_cosine_schedule():
+    sched = cosine_lr(1.0, warmup=10, total=100)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0, abs=0.05)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.1, abs=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.01, 0.3), st.integers(0, 100))
+def test_sgd_property_descent(lr, seed):
+    """One SGD step on a convex quadratic never increases the loss."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (5,))
+    loss = lambda w_: 0.5 * jnp.sum(w_ ** 2)
+    opt = sgd(lr)
+    upd, _ = opt.update(jax.grad(loss)(w), opt.init(w), jnp.int32(0))
+    assert float(loss(w - upd)) <= float(loss(w)) + 1e-6
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.int32), "d": jnp.zeros(())},
+            "e": [jnp.full((2,), 7.0)]}
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 42, tree, extra={"note": "x"})
+        assert checkpointer.latest_step(d) == 42
+        like = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+        out = checkpointer.restore(d, like)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_multiple_steps():
+    tree = {"w": jnp.ones(3)}
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 1, tree)
+        checkpointer.save(d, 2, jax.tree.map(lambda a: 2 * a, tree))
+        out = checkpointer.restore(d, tree)            # latest
+        np.testing.assert_array_equal(np.asarray(out["w"]), 2 * np.ones(3))
+        out1 = checkpointer.restore(d, tree, step=1)
+        np.testing.assert_array_equal(np.asarray(out1["w"]), np.ones(3))
+
+
+def test_checkpoint_missing():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            checkpointer.restore(d, {"w": jnp.ones(1)})
+
+
+def test_train_state_roundtrip():
+    """Full TrainState (params + artemis memory) survives save/restore."""
+    from repro import configs
+    from repro.core import dist
+    from repro.models.model import build_model
+    from repro.optim import sgd as mk_sgd
+    cfg = configs.get_config("starcoder2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = dist.DistConfig(worker_axes=(), variant="artemis")
+    state = dist.TrainState(params, mk_sgd(0.1).init(params),
+                            dist.init_dist_state(dcfg, params, 1),
+                            jnp.zeros((), jnp.int32))
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 0, state)
+        out = checkpointer.restore(d, state)
+        assert jax.tree.structure(out) == jax.tree.structure(state)
