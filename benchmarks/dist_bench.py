@@ -1,24 +1,111 @@
-"""Distributed-step benchmark: Artemis vs baseline on a host mesh.
+"""Distributed benchmarks.
 
-Times one optimizer step of a reduced arch with/without compressed
-aggregation, and reports the analytic inter-worker wire bytes — the quantity
-the paper's technique reduces (and §Roofline's collective term measures on
-the production mesh).
+Default suite: the batched sweep engine vs the seed's per-cell Python loop on
+the paper's experiment grid (6 variants x 4 step-sizes x 3 seeds, 200
+rounds).  The per-cell loop re-traces a fresh ``lax.scan`` and evaluates the
+full-batch loss every round for every cell; ``run_sweep`` compiles the whole
+grid ONCE and thins monitoring to an ``eval_every`` stride.  Results are
+written to BENCH_sweep.json so the perf trajectory is tracked across PRs.
+
+The legacy host-mesh optimizer-step suite is kept behind a capability guard
+(it needs the explicit-sharding jax API that this container's jax may lack).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.core import dist
-from repro.launch import mesh as M
-from repro.models.model import build_model
-from repro.optim import sgd
+from repro.core import artemis as art
+from repro.core import federated as fed
+from repro.core import sweep as sw
 
+FAST = False      # set by benchmarks/run.py --fast: one cell, few iters
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+
+VARIANTS = ["sgd", "qsgd", "diana", "biqsgd", "artemis", "dore"]
+GAMMA_FRACS = [0.125, 0.25, 0.5, 1.0]
+SEEDS = [0, 1, 2]
+ITERS = 200
+EVAL_EVERY = 10
+
+
+def sweep_engine_suite():
+    """One-trace multi-variant grid vs the seed's per-cell loop."""
+    n, d = 20, 20
+    variants = VARIANTS[:1] if FAST else VARIANTS
+    fracs = GAMMA_FRACS[:1] if FAST else GAMMA_FRACS
+    seeds = SEEDS[:1] if FAST else SEEDS
+    iters = 20 if FAST else ITERS
+
+    prob, _ = fed.make_lsr_problem(jax.random.PRNGKey(11), n_workers=n,
+                                   n_per=200, d=d, noise=0.4)
+    cfgs = [art.variant_config(v, d, n) for v in variants]
+    g_ref = fed.gamma_max(prob, art.variant_config("artemis", d, n))
+    gammas = [f * g_ref for f in fracs]
+    cells = len(cfgs) * len(gammas) * len(seeds)
+
+    # --- the seed's per-cell Python loop: one trace + per-round loss each ---
+    t0 = time.time()
+    for cfg in cfgs:
+        for g in gammas:
+            for s in seeds:
+                fed.run_percell(prob, cfg, gamma=g, iters=iters,
+                                key=jax.random.PRNGKey(s), batch=1)
+    percell_s = time.time() - t0
+
+    # --- sweep engine: cold (includes the single compile), then warm -------
+    t0 = time.time()
+    res_cold = sw.run_sweep(prob, cfgs, gammas, seeds, iters, batch=1,
+                            eval_every=EVAL_EVERY if not FAST else 1)
+    cold_s = time.time() - t0
+    t0 = time.time()
+    res_warm = sw.run_sweep(prob, cfgs, gammas, seeds, iters, batch=1,
+                            eval_every=EVAL_EVERY if not FAST else 1)
+    warm_s = time.time() - t0
+
+    report = {
+        "grid": {"variants": variants, "n_gammas": len(gammas),
+                 "n_seeds": len(seeds), "cells": cells, "iters": iters,
+                 "eval_every": EVAL_EVERY if not FAST else 1,
+                 "n_workers": n, "dim": d},
+        "percell_wall_s": round(percell_s, 3),
+        "sweep_cold_wall_s": round(cold_s, 3),
+        "sweep_warm_wall_s": round(warm_s, 3),
+        "speedup_cold": round(percell_s / cold_s, 2),
+        "speedup_warm": round(percell_s / warm_s, 2),
+        "cells_per_sec_warm": round(cells / warm_s, 2),
+        "traces_cold": res_cold.traces,
+        "traces_warm": res_warm.traces,
+        "device": jax.devices()[0].device_kind,
+        "jax": jax.__version__,
+    }
+    if not FAST:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    rows = [
+        ("sweep/percell_loop", percell_s * 1e6 / (cells * iters),
+         f"wall_s={percell_s:.2f} traces~{cells}"),
+        ("sweep/engine_cold", cold_s * 1e6 / (cells * iters),
+         f"wall_s={cold_s:.2f} traces={res_cold.traces} "
+         f"speedup={percell_s / cold_s:.1f}x"),
+        ("sweep/engine_warm", warm_s * 1e6 / (cells * iters),
+         f"wall_s={warm_s:.2f} traces={res_warm.traces} "
+         f"speedup={percell_s / warm_s:.1f}x"),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# legacy host-mesh optimizer-step suite (explicit-sharding jax API)
+# ---------------------------------------------------------------------------
 
 def _wire_bytes(params, variant, n_workers, s=1):
     """Analytic per-step inter-worker bytes per worker (uplink+downlink)."""
@@ -36,6 +123,16 @@ def _wire_bytes(params, variant, n_workers, s=1):
 
 
 def dist_step_suite():
+    if not hasattr(jax.sharding, "AxisType") or not hasattr(jax, "set_mesh"):
+        return [("dist_step/skipped", 0.0,
+                 "needs jax explicit-sharding API (jax.sharding.AxisType)")]
+
+    from repro import configs
+    from repro.core import dist
+    from repro.launch import mesh as M
+    from repro.models.model import build_model
+    from repro.optim import sgd
+
     rows = []
     mesh = M.make_host_mesh()
     cfg = configs.get_config("starcoder2-7b", reduced=True)
@@ -66,4 +163,4 @@ def dist_step_suite():
     return rows
 
 
-ALL = [dist_step_suite]
+ALL = [sweep_engine_suite, dist_step_suite]

@@ -18,8 +18,12 @@ from repro.kernels import fused_memory as fm
 
 KEY = jax.random.PRNGKey(0)
 
+FAST = False      # set by benchmarks/run.py --fast: small shapes, 1 rep
+
 
 def _bench(fn, *args, reps=5):
+    if FAST:
+        reps = 1
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.time()
@@ -30,7 +34,7 @@ def _bench(fn, *args, reps=5):
 
 
 def kernel_suite():
-    m, n = 1024, 1024
+    m, n = (256, 256) if FAST else (1024, 1024)
     x = jax.random.normal(KEY, (m, n))
     u = jax.random.uniform(jax.random.PRNGKey(1), (m, n))
     h = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (m, n))

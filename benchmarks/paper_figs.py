@@ -1,6 +1,11 @@
 """Benchmarks reproducing each paper table/figure on the federated simulator.
 
+Every grid now runs through the batched sweep engine (core.sweep.run_sweep):
+one compiled program per figure instead of one trace per cell, with
+monitoring thinned to an ``eval_every`` stride.
+
 Each function returns a list of CSV rows: (name, us_per_call, derived) where
+``us_per_call`` is wall-clock per simulated round per grid cell and
 ``derived`` carries the figure's headline quantity (saturation level, bits,
 excess loss, ...).
 """
@@ -14,49 +19,60 @@ import numpy as np
 
 from repro.core import artemis as art
 from repro.core import federated as fed
+from repro.core import sweep as sw
 
 KEY = jax.random.PRNGKey(123)
 N, D = 20, 20
 
+FAST = False      # set by benchmarks/run.py --fast: one cell, few iters
 
-def _timed(fn):
+
+def _grid_size(res):
+    return int(np.prod(res.losses.shape[:3]))
+
+
+def _sweep_timed(prob, cfgs, gammas, iters, **kw):
     t0 = time.time()
-    out = fn()
-    return out, (time.time() - t0) * 1e6
+    res = sw.run_sweep(prob, cfgs, gammas, kw.pop("seeds", [0]), iters, **kw)
+    dt = time.time() - t0
+    return res, dt * 1e6 / (iters * _grid_size(res))
 
 
 def fig3a_saturation():
     """Fig 3a / S7: LSR i.i.d., sigma_* != 0 -> all variants saturate; double
     compression saturates above single, above SGD."""
+    variants = ["sgd", "qsgd", "diana", "biqsgd", "artemis"]
+    iters, tail = (300, 50) if FAST else (3000, 300)
     prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.4)
     opt = float(prob.global_loss(prob.solve_opt()))
     # one SHARED step size, stable for every variant (the bidirectional
     # gamma_max is the binding one) -> saturation ordering isolates E (Thm 1)
     gamma = 0.8 * fed.gamma_max(prob, art.variant_config("artemis", D, N))
+    cfgs = [art.variant_config(v, D, N) for v in (variants[:1] if FAST else variants)]
+    res, us = _sweep_timed(prob, cfgs, [gamma], iters, batch=1, eval_every=10)
     rows = []
-    for variant in ["sgd", "qsgd", "diana", "biqsgd", "artemis"]:
-        cfg = art.variant_config(variant, D, N)
-        (r, us) = _timed(lambda: fed.run(prob, cfg, gamma=gamma, iters=3000,
-                                         key=KEY, batch=1))
-        sat = float(np.mean(r.losses[-300:])) - opt
-        rows.append((f"fig3a/{variant}", us / 3000, f"saturation={sat:.3e}"))
+    for vi, v in enumerate(variants[:len(cfgs)]):
+        sat = float(np.mean(res.losses[vi, 0, 0, -tail // 10:])) - opt
+        rows.append((f"fig3a/{v}", us, f"saturation={sat:.3e}"))
     return rows
 
 
 def fig3b_memory_noniid():
     """Fig 3b / S9: non-i.i.d. logistic, full batch (sigma_*=0): memory
     converges linearly; memoryless saturates."""
+    variants = ["biqsgd", "artemis", "qsgd", "diana", "sgd"]
+    iters = 80 if FAST else 800
     prob = fed.make_logistic_problem(jax.random.PRNGKey(3), n_workers=N,
                                      n_per=200, d=2)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 1.0 / (2 * prob.smoothness())
+    cfgs = [art.variant_config(v, 2, N) for v in (variants[:1] if FAST else variants)]
+    res, us = _sweep_timed(prob, cfgs, [gamma], iters, full_batch=True,
+                           eval_every=10)
     rows = []
-    for variant in ["biqsgd", "artemis", "qsgd", "diana", "sgd"]:
-        cfg = art.variant_config(variant, 2, N)
-        (r, us) = _timed(lambda: fed.run(prob, cfg, gamma=gamma, iters=800,
-                                         key=KEY, full_batch=True))
-        exc = float(r.losses[-1]) - opt
-        rows.append((f"fig3b/{variant}", us / 800, f"excess={exc:.3e}"))
+    for vi, v in enumerate(variants[:len(cfgs)]):
+        exc = float(res.losses[vi, 0, 0, -1]) - opt
+        rows.append((f"fig3b/{v}", us, f"excess={exc:.3e}"))
     return rows
 
 
@@ -64,89 +80,93 @@ def fig4_bits():
     """Fig 4 / S11-S12: loss vs communicated bits on the clustered non-iid
     stand-in; bidirectional compression reaches target accuracy in ~10x fewer
     bits."""
+    variants = ["sgd", "qsgd", "diana", "biqsgd", "artemis"]
+    iters = 60 if FAST else 600
     prob = fed.make_clustered_problem(jax.random.PRNGKey(5), n_workers=N,
                                       n_per=300, d=40)
     opt = float(prob.global_loss(prob.solve_opt()))
     target = 0.5 * float(prob.global_loss(jnp.zeros(40)) - opt)
+    gamma = 0.5 / prob.smoothness()
+    cfgs = [art.variant_config(v, 40, N) for v in (variants[:1] if FAST else variants)]
+    res, us = _sweep_timed(prob, cfgs, [gamma], iters, batch=16, eval_every=5)
     rows = []
-    for variant in ["sgd", "qsgd", "diana", "biqsgd", "artemis"]:
-        cfg = art.variant_config(variant, 40, N)
-        gamma = 0.5 / prob.smoothness()
-        (r, us) = _timed(lambda: fed.run(prob, cfg, gamma=gamma, iters=600,
-                                         key=KEY, batch=16))
-        exc = r.losses - opt
+    for vi, v in enumerate(variants[:len(cfgs)]):
+        exc = res.losses[vi, 0, 0] - opt
         hit = np.argmax(exc < target) if (exc < target).any() else -1
-        bits = r.bits[hit] if hit >= 0 else float("inf")
-        rows.append((f"fig4/{variant}", us / 600,
-                     f"bits_to_half_loss={bits:.3e}"))
+        bits = res.bits[vi, 0, 0, hit] if hit >= 0 else float("inf")
+        rows.append((f"fig4/{v}", us, f"bits_to_half_loss={bits:.3e}"))
     return rows
 
 
 def fig56_partial_participation():
     """Fig 5 vs Fig 6: PP1 saturates even without compression; PP2 converges
-    linearly (sigma_*=0, full gradients, non-iid)."""
+    linearly (sigma_*=0, full gradients, non-iid).  All four (mode, variant)
+    combinations ride ONE sweep: the pp_mode is just another branch."""
+    iters, tail = (80, 5) if FAST else (800, 5)
     prob = fed.make_logistic_problem(jax.random.PRNGKey(7), n_workers=N,
                                      n_per=200, d=2)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 1.0 / (2 * prob.smoothness())
+    combos = [("pp1", "sgd-mem"), ("pp1", "artemis"),
+              ("pp2", "sgd-mem"), ("pp2", "artemis")]
+    if FAST:
+        combos = combos[:1]
+    cfgs = [art.variant_config(v, 2, N, p=0.5, pp_mode=m) for m, v in combos]
+    res, us = _sweep_timed(prob, cfgs, [gamma], iters, full_batch=True,
+                           eval_every=10)
     rows = []
-    for mode in ["pp1", "pp2"]:
-        for variant in ["sgd-mem", "artemis"]:
-            cfg0 = art.variant_config(variant, 2, N, p=0.5, pp_mode=mode)
-            (r, us) = _timed(lambda: fed.run(prob, cfg0, gamma=gamma, iters=800,
-                                             key=KEY, full_batch=True))
-            exc = float(np.mean(r.losses[-50:])) - opt
-            rows.append((f"fig56/{mode}/{variant}", us / 800,
-                         f"excess={exc:.3e}"))
+    for ci, (mode, variant) in enumerate(combos):
+        exc = float(np.mean(res.losses[ci, 0, 0, -tail:])) - opt
+        rows.append((f"fig56/{mode}/{variant}", us, f"excess={exc:.3e}"))
     return rows
 
 
 def table3_gamma_max():
     """Table 3: the theoretical gamma_max is SUFFICIENT for convergence
-    (validity), and we measure how conservative it is via a doubling search
-    for the empirical stability edge."""
+    (validity); the doubling search for the empirical stability edge is now a
+    VECTORIZED gamma axis — one sweep per variant instead of a Python loop."""
+    iters = 40 if FAST else 400
+    n_mults = 1 if FAST else 8
     prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.0)
     rows = []
-    for variant in ["sgd", "qsgd", "artemis"]:
+    for variant in (["sgd"] if FAST else ["sgd", "qsgd", "artemis"]):
         cfg = art.variant_config(variant, D, N)
         g = fed.gamma_max(prob, cfg)
-        (r_ok, us) = _timed(lambda: fed.run(prob, cfg, gamma=g, iters=400,
-                                            key=KEY, batch=8))
-        ok = float(r_ok.losses[-1])
-        valid = np.isfinite(ok) and ok < float(r_ok.losses[0])
-        # doubling search for the empirical divergence edge
-        mult = 1.0
-        while mult <= 64:
-            r = fed.run(prob, cfg, gamma=g * mult * 2, iters=400, key=KEY, batch=8)
-            if not np.isfinite(r.losses[-1]) or r.losses[-1] > r.losses[0]:
-                break
-            mult *= 2
-        rows.append((f"table3/{variant}", us / 400,
+        mults = 2.0 ** np.arange(n_mults)              # 1x .. 128x
+        res, us = _sweep_timed(prob, [cfg], g * mults, iters, batch=8,
+                               eval_every=iters // 4)
+        f0 = float(prob.global_loss(jnp.zeros(D)))     # loss at w0
+        last = res.losses[0, :, 0, -1]
+        ok = np.isfinite(last) & (last < f0)
+        valid = bool(ok[0])
+        edge = mults[np.argmin(ok)] / 2 if (~ok).any() else mults[-1]
+        rows.append((f"table3/{variant}", us,
                      f"theory_gmax_converges={'yes' if valid else 'NO'} "
-                     f"empirical/theory~{mult:.0f}x"))
+                     f"empirical/theory~{edge:.0f}x"))
     return rows
 
 
 def thm3_variance_lower_bound():
     """Thm 3: asymptotic variance grows with omega_up (and omega_dwn):
     sparsification with smaller q (bigger omega) saturates strictly higher."""
+    iters, tail = (80, 2) if FAST else (800, 10)
     prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.4)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 1.0 / (6 * prob.smoothness())
-    rows = []
-    sats = {}
-    for q in [1.0, 0.5, 0.25]:
-        cfg = art.ArtemisConfig(dim=D, n_workers=N, up="sparsify", dwn="sparsify",
-                                up_kwargs={"q": q}, dwn_kwargs={"q": q},
-                                alpha=0.0 if q == 1.0 else None)
-        (r, us) = _timed(lambda: fed.run(prob, cfg, gamma=gamma, iters=800,
-                                         key=KEY, batch=1))
-        sats[q] = float(np.mean(r.losses[-100:])) - opt
-        rows.append((f"thm3/sparsify_q={q}", us / 800,
-                     f"saturation={sats[q]:.3e}"))
-    rows.append(("thm3/monotone", 0.0,
-                 f"omega_up_increases_variance="
-                 f"{'yes' if sats[0.25] > sats[1.0] else 'NO'}"))
+    qs = [1.0] if FAST else [1.0, 0.5, 0.25]
+    cfgs = [art.ArtemisConfig(dim=D, n_workers=N, up="sparsify", dwn="sparsify",
+                              up_kwargs={"q": q}, dwn_kwargs={"q": q},
+                              alpha=0.0 if q == 1.0 else None)
+            for q in qs]
+    res, us = _sweep_timed(prob, cfgs, [gamma], iters, batch=1, eval_every=10)
+    rows, sats = [], {}
+    for qi, q in enumerate(qs):
+        sats[q] = float(np.mean(res.losses[qi, 0, 0, -tail:])) - opt
+        rows.append((f"thm3/sparsify_q={q}", us, f"saturation={sats[q]:.3e}"))
+    if not FAST:
+        rows.append(("thm3/monotone", 0.0,
+                     f"omega_up_increases_variance="
+                     f"{'yes' if sats[0.25] > sats[1.0] else 'NO'}"))
     return rows
 
 

@@ -1,15 +1,34 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   python benchmarks/run.py [filter] [--fast]
+#
+# ``--fast`` is the CI smoke mode: every suite shrinks to one grid cell and a
+# handful of iterations, so the whole file finishes in well under a minute.
 from __future__ import annotations
 
+import os
 import sys
 import traceback
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
     from benchmarks import dist_bench, kernel_bench, paper_figs
 
+    args = [a for a in sys.argv[1:]]
+    fast = "--fast" in args
+    if fast:
+        args.remove("--fast")
+        dist_bench.FAST = True
+        paper_figs.FAST = True
+        kernel_bench.FAST = True
+    only = args[0] if args else None
+
     suites = paper_figs.ALL + kernel_bench.ALL + dist_bench.ALL
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failures = 0
     for suite in suites:

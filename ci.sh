@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Minimal CI gate. Stages:
+#   1. fast test tier   (tier-1: pytest default set, < 2 min budget)
+#   2. slow test tier   (model-zoo smoke, XLA-compile bound)
+#   3. benchmark smoke  (one grid cell per suite; catches API rot cheaply)
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== stage 1: fast tests ==="
+python -m pytest -x -q
+
+echo "=== stage 2: slow tests (model zoo) ==="
+python -m pytest -x -q -m slow
+
+echo "=== stage 3: benchmark smoke (--fast) ==="
+python benchmarks/run.py --fast
+echo "CI OK"

@@ -10,6 +10,10 @@ prints the claims being validated:
                converges linearly where Bi-QSGD stalls.
   4. Fig 5/6 — partial participation: PP1 saturates, the novel PP2 does not.
 
+Every experiment runs its whole variant grid through the batched sweep
+engine (core.sweep.run_sweep): one compiled program per experiment instead
+of one retrace per variant.
+
     PYTHONPATH=src python examples/federated_artemis.py
 """
 import jax
@@ -18,6 +22,7 @@ import numpy as np
 
 from repro.core import artemis as art
 from repro.core import federated as fed
+from repro.core import sweep as sw
 
 KEY = jax.random.PRNGKey(0)
 N, D = 20, 20
@@ -28,22 +33,28 @@ def exp1_saturation():
     prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.4)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 0.8 * fed.gamma_max(prob, art.variant_config("artemis", D, N))
-    for v in ["sgd", "qsgd", "diana", "biqsgd", "artemis"]:
-        r = fed.run(prob, art.variant_config(v, D, N), gamma=gamma, iters=3000,
-                    key=KEY, batch=1)
-        sat = float(np.mean(r.losses[-300:])) - opt
+    variants = ["sgd", "qsgd", "diana", "biqsgd", "artemis"]
+    cfgs = [art.variant_config(v, D, N) for v in variants]
+    res = sw.run_sweep(prob, cfgs, [gamma], [0], iters=3000, batch=1,
+                       eval_every=10)
+    for vi, v in enumerate(variants):
+        sat = float(np.mean(res.losses[vi, 0, 0, -30:])) - opt
         print(f"  {v:8s} saturation = {sat:.2e}")
+    print(f"  (grid of {len(cfgs)} variants compiled {res.traces}x)")
     print("  -> ordering sgd < one-way < two-way, as Thm 1's E predicts")
 
 
 def exp2_linear():
     print("\n=== 2. Fig S8: linear convergence when sigma_* == 0 ===")
     prob, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=200, d=D, noise=0.0)
-    for v in ["sgd", "qsgd", "biqsgd", "artemis"]:
-        cfg = art.variant_config(v, D, N)
-        g = fed.gamma_max(prob, cfg)
-        r = fed.run(prob, cfg, gamma=g, iters=600, key=KEY, batch=8)
-        print(f"  {v:8s} F(w_600)-F* = {r.losses[-1]:.2e}  (gamma_max={g:.4f})")
+    variants = ["sgd", "qsgd", "biqsgd", "artemis"]
+    cfgs = [art.variant_config(v, D, N) for v in variants]
+    gs = [fed.gamma_max(prob, c) for c in cfgs]
+    # per-variant gamma_max: run the (variant x gamma) grid, read the diagonal
+    res = sw.run_sweep(prob, cfgs, gs, [0], iters=600, batch=8, eval_every=100)
+    for vi, v in enumerate(variants):
+        print(f"  {v:8s} F(w_600)-F* = {res.losses[vi, vi, 0, -1]:.2e}  "
+              f"(gamma_max={gs[vi]:.4f})")
     print("  -> all reach ~machine precision: threshold E ∝ sigma_*^2 = 0")
 
 
@@ -53,11 +64,14 @@ def exp3_memory():
                                      n_per=200, d=2)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 1.0 / (2 * prob.smoothness())
-    for v in ["biqsgd", "artemis"]:
-        r = fed.run(prob, art.variant_config(v, 2, N), gamma=gamma, iters=800,
-                    key=KEY, full_batch=True)
+    variants = ["biqsgd", "artemis"]
+    cfgs = [art.variant_config(v, 2, N) for v in variants]
+    res = sw.run_sweep(prob, cfgs, [gamma], [0], iters=800, full_batch=True,
+                       eval_every=100)
+    for vi, v in enumerate(variants):
         tag = "memoryless" if v == "biqsgd" else "with memory"
-        print(f"  {v:8s} ({tag:11s}) excess = {r.losses[-1] - opt:.2e}")
+        print(f"  {v:8s} ({tag:11s}) excess = "
+              f"{res.losses[vi, 0, 0, -1] - opt:.2e}")
     print("  -> identical compression, only the memory differs")
 
 
@@ -67,10 +81,14 @@ def exp4_pp():
                                      n_per=200, d=2)
     opt = float(prob.global_loss(prob.solve_opt()))
     gamma = 1.0 / (2 * prob.smoothness())
-    for mode in ["pp1", "pp2"]:
-        cfg = art.variant_config("artemis", 2, N, p=0.5, pp_mode=mode)
-        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
-        print(f"  {mode}: excess = {float(np.mean(r.losses[-50:])) - opt:.2e}")
+    modes = ["pp1", "pp2"]
+    cfgs = [art.variant_config("artemis", 2, N, p=0.5, pp_mode=m)
+            for m in modes]
+    res = sw.run_sweep(prob, cfgs, [gamma], [0], iters=800, full_batch=True,
+                       eval_every=10)
+    for mi, mode in enumerate(modes):
+        exc = float(np.mean(res.losses[mi, 0, 0, -5:])) - opt
+        print(f"  {mode}: excess = {exc:.2e}")
     print("  -> PP1 saturates at (1-p)B^2/(Np); PP2 (the paper's novel "
           "algorithm) converges linearly")
 

@@ -42,6 +42,7 @@ class ArtemisConfig:
     p: float = 1.0                 # participation probability (Assumption 6)
     pp_mode: str = "pp2"           # 'pp1' | 'pp2'
     error_feedback: bool = False   # Dore-like EF (beyond paper)
+    backend: str = "dense"         # 'dense' | 'pallas' (fused uplink kernels)
 
     def compressors(self) -> Tuple[comp.Compressor, comp.Compressor]:
         c_up = comp.make_compressor(self.up, self.dim, **self.up_kwargs)
@@ -94,30 +95,10 @@ def variant_config(variant: str, dim: int, n_workers: int, s: int = 1,
                          up_kwargs={"s": s}, dwn_kwargs={"s": s}, **kw)
 
 
-def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
-                  key: jax.Array, active: Optional[jax.Array] = None):
-    """One communication round.
-
-    Args:
-      grads:  [N, d] per-worker stochastic gradients g_{k+1}^i(w_k).
-      active: optional {0,1} float mask [N]; default all-active.
-
-    Returns:
-      omega:  [d] the (doubly) compressed descent direction Omega_{k+1}.
-      state':  updated ArtemisState.
-      stats:  dict of bit costs and diagnostics for this round.
-    """
-    c_up, c_dwn = cfg.compressors()
-    alpha = cfg.resolved_alpha()
-    n, d = cfg.n_workers, cfg.dim
-    if active is None:
-        active = jnp.ones((n,), grads.dtype)
-    active = active.astype(grads.dtype)[:, None]          # [N,1]
-
-    up_key, dwn_key = jax.random.split(jax.random.fold_in(key, state.step))
-    up_keys = jax.random.split(up_key, n)
-
-    # ---- workers: compress gradient differences ---------------------------
+def _uplink_dense(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
+                  up_keys: jax.Array, active: jax.Array, alpha: float):
+    """Reference uplink: vmap the functional compressor over workers."""
+    c_up, _ = cfg.compressors()
     delta = grads - state.h                                # [N,d]
     if cfg.error_feedback:
         delta = delta + state.e
@@ -130,25 +111,100 @@ def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
     # only active workers compress/communicate & update their local memory
     delta_hat = active * delta_hat
     new_h = state.h + alpha * delta_hat                    # inactive rows unchanged
+    sum_hat = jnp.sum(delta_hat, axis=0)                   # [d]
+    return delta_hat, new_h, new_e, sum_hat
+
+
+def _uplink_pallas(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
+                   up_keys: jax.Array, active: jax.Array, alpha: float):
+    """Fused uplink: worker encode + memory update in one HBM pass
+    (kernels/fused_memory.py) and server dequant-accumulate (kernels/ring_sum).
+
+    Each worker row is one kernel block, so the per-block scale is the
+    per-worker global L2 norm — identical semantics to ``squant`` on the
+    dense path (same keys, same uniforms, same levels up to fp reassociation).
+    """
+    from repro.kernels.fused_memory import fused_memory_update
+    from repro.kernels.ring_sum import ring_sum
+
+    if cfg.error_feedback:
+        raise NotImplementedError("backend='pallas' does not support EF yet")
+    if cfg.up != "squant":
+        # tile_squant would need block=(1, tile) per-tile scales; only the
+        # global-norm operator matches the (1, d)-block layout used here
+        raise NotImplementedError(
+            f"backend='pallas' requires the global-norm 'squant' uplink, "
+            f"got {cfg.up!r}")
+    n, d = cfg.n_workers, cfg.dim
+    s = int(cfg.up_kwargs.get("s", 1))
+    # same uniforms the dense compressor would draw under vmap
+    u = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(up_keys)
+    q, scales, h_fused = fused_memory_update(
+        grads, state.h, u, alpha, s=s, block=(1, d), interpret=True)
+    # inactive workers neither transmit nor touch their memory
+    new_h = active * h_fused + (1 - active) * state.h
+    act_scales = scales * active                            # [N,1]
+    sum_hat = ring_sum(q[:, None, :], act_scales[:, :, None],
+                       block=(1, d), interpret=True).reshape(d)
+    delta_hat = q.astype(grads.dtype) * act_scales          # [N,d] decoded
+    return delta_hat, new_h, state.e, sum_hat
+
+
+def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
+                  key: jax.Array, active: Optional[jax.Array] = None,
+                  backend: Optional[str] = None):
+    """One communication round.
+
+    Args:
+      grads:  [N, d] per-worker stochastic gradients g_{k+1}^i(w_k).
+      active: optional {0,1} float mask [N]; default all-active.
+      backend: 'dense' (reference) or 'pallas' (fused uplink kernels);
+        default ``cfg.backend``.
+
+    Returns:
+      omega:  [d] the (doubly) compressed descent direction Omega_{k+1}.
+      state':  updated ArtemisState.
+      stats:  dict of bit costs and diagnostics for this round.
+    """
+    c_up, c_dwn = cfg.compressors()
+    alpha = cfg.resolved_alpha()
+    n, d = cfg.n_workers, cfg.dim
+    backend = cfg.backend if backend is None else backend
+    if active is None:
+        active = jnp.ones((n,), grads.dtype)
+    active = active.astype(grads.dtype)[:, None]          # [N,1]
+
+    up_key, dwn_key = jax.random.split(jax.random.fold_in(key, state.step))
+    up_keys = jax.random.split(up_key, n)
+
+    # ---- workers: compress gradient differences ---------------------------
+    uplink = {"dense": _uplink_dense, "pallas": _uplink_pallas}[backend]
+    delta_hat, new_h, new_e, sum_hat = uplink(cfg, state, grads, up_keys,
+                                              active, alpha)
 
     # ---- server: reconstruct, aggregate, compress downlink ----------------
-    sum_hat = jnp.sum(delta_hat, axis=0)                   # [d]
     if cfg.pp_mode == "pp2":
         ghat = state.hbar + sum_hat / (cfg.p * n)
-        new_hbar = state.hbar + alpha * jnp.sum(delta_hat, axis=0) / n
+        new_hbar = state.hbar + alpha * sum_hat / n
     elif cfg.pp_mode == "pp1":
         # server-side copies of h_i; only ACTIVE memories are read
-        ghat = jnp.sum(active * (delta_hat + state.h), axis=0) / (cfg.p * n)
+        ghat = sum_hat / (cfg.p * n) + jnp.sum(active * state.h, axis=0) / (cfg.p * n)
         new_hbar = jnp.mean(new_h, axis=0)
     else:
         raise ValueError(f"unknown pp_mode {cfg.pp_mode!r}")
 
     omega = c_dwn(dwn_key, ghat)
 
+    delta = grads - state.h
+    if cfg.error_feedback:
+        delta = delta + state.e
     n_active = jnp.sum(active)
+    # Metering rule (see DESIGN.md §4 / federated.run): the broadcast reaches
+    # only the participating workers; returners' catch-up is metered by the
+    # simulator on top of this.
     stats = {
         "uplink_bits": n_active * c_up.bits(d),
-        "dwnlink_bits": float(n) * c_dwn.bits(d),
+        "dwnlink_bits": n_active * c_dwn.bits(d),
         "compress_err_up": jnp.mean(jnp.sum((delta_hat - active * delta) ** 2, -1)),
         "compress_err_dwn": jnp.sum((omega - ghat) ** 2),
         "ghat_norm": jnp.linalg.norm(ghat),

@@ -162,8 +162,47 @@ class RunResult:
 def run(problem: Problem, cfg: art.ArtemisConfig, gamma: float, iters: int,
         key: jax.Array, batch: int = 1, w0: Optional[jax.Array] = None,
         full_batch: bool = False, w_star: Optional[jax.Array] = None,
-        gamma_decay: bool = False) -> RunResult:
-    """Run Artemis (any variant) on ``problem`` for ``iters`` rounds."""
+        gamma_decay: bool = False, eval_every: int = 1,
+        backend: Optional[str] = None) -> RunResult:
+    """Run Artemis (any variant) on ``problem`` for ``iters`` rounds.
+
+    Thin wrapper over the batched sweep engine (``core.sweep.run_sweep``)
+    with a single-cell grid: repeated calls that differ only in ``gamma`` or
+    ``key`` hit the compiled-program cache and re-trace zero times.  The
+    original one-trace-per-call loop is kept as ``run_percell`` (legacy
+    reference).
+
+    Bit metering (unified rule, DESIGN.md §4): per round, every ACTIVE worker
+    pays its uplink message plus the downlink catch-up — one compressed
+    update per round missed since its last participation (>= 1: a worker
+    active every round pays exactly this round's broadcast), capped at one
+    full model once it has been away longer than floor(M1/M2) rounds
+    (Remark 3).  Inactive workers communicate nothing.
+    """
+    from repro.core import sweep as _sweep   # lazy: sweep imports this module
+    res = _sweep.run_sweep(
+        problem, [cfg], [gamma], jnp.asarray(key)[None], iters, batch=batch,
+        eval_every=eval_every, full_batch=full_batch, w0=w0, w_star=w_star,
+        gamma_decay=gamma_decay, backend=backend)
+    return RunResult(
+        losses=res.losses[0, 0, 0],
+        bits=res.bits[0, 0, 0],
+        w_final=res.w_final[0, 0, 0],
+        w_avg=res.w_avg[0, 0, 0],
+        w_tail_avg=res.w_tail_avg[0, 0, 0],
+        dist_to_opt=res.dists[0, 0, 0] if w_star is not None else None,
+    )
+
+
+def run_percell(problem: Problem, cfg: art.ArtemisConfig, gamma: float,
+                iters: int, key: jax.Array, batch: int = 1,
+                w0: Optional[jax.Array] = None, full_batch: bool = False,
+                w_star: Optional[jax.Array] = None,
+                gamma_decay: bool = False) -> RunResult:
+    """Legacy single-cell loop: traces a fresh ``lax.scan`` per call and
+    evaluates the full-batch loss every iteration.  Kept as the reference
+    implementation the sweep engine is benchmarked and cross-checked against
+    (benchmarks/dist_bench.py, tests/test_sweep.py)."""
     n, d = problem.n_workers, problem.dim
     n_per = problem.X.shape[1]
     c_up, c_dwn = cfg.compressors()
@@ -173,7 +212,7 @@ def run(problem: Problem, cfg: art.ArtemisConfig, gamma: float, iters: int,
 
     w0 = jnp.zeros((d,)) if w0 is None else w0
     state0 = art.init_state(cfg)
-    last_part0 = jnp.zeros((n,), jnp.int32)      # k_i, last participation
+    last_part0 = -jnp.ones((n,), jnp.int32)      # k_i, last participation
 
     def step(carry, k):
         w, st, wsum, wtail, last_part = carry
@@ -189,12 +228,12 @@ def run(problem: Problem, cfg: art.ArtemisConfig, gamma: float, iters: int,
         g = gamma / jnp.sqrt(k + 1.0) if gamma_decay else gamma
         w = w - g * omega
         # --- catch-up bit metering (Remark 3) ------------------------------
-        missed = k - last_part                                  # rounds absent
+        missed = k - last_part              # rounds since last download (>= 1)
         catch_bits = jnp.where(missed > catchup_window,
                                float(m1), missed.astype(jnp.float32) * m2)
         catch_bits = jnp.sum(active * catch_bits)
         last_part = jnp.where(active > 0, k, last_part).astype(jnp.int32)
-        bits = stats["uplink_bits"] + catch_bits                # dwn counted in catch-up
+        bits = stats["uplink_bits"] + catch_bits    # dwnlink counted in catch-up
         loss = problem.global_loss(w)
         wtail = wtail + jnp.where(k >= iters // 2, 1.0, 0.0) * w
         return (w, st, wsum + w, wtail, last_part), (loss, bits,

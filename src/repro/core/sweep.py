@@ -1,0 +1,251 @@
+"""Batched sweep engine: the whole {variant} x {gamma} x {seed} grid in ONE
+compiled program.
+
+The paper's experiment grids (§5, Figs. 2-6) are dozens of cells; running
+them through ``federated.run`` retraces a fresh ``lax.scan`` per cell and
+evaluates the full-batch global loss every iteration, so wall-clock is
+dominated by tracing + monitoring.  ``run_sweep`` instead:
+
+  * ``vmap``s one cell program over the flattened (variant, gamma, seed)
+    grid, dispatching algorithm variants with ``lax.switch`` over a static
+    per-config branch table — the grid compiles exactly ONCE;
+  * thins monitoring to an ``eval_every`` stride: the scan is restructured
+    as ``n_evals`` outer steps of ``eval_every`` fused micro-rounds, and the
+    full-batch loss / distance-to-optimum are computed only at the outer
+    step (``eval_every=1`` reproduces ``federated.run`` exactly);
+  * donates the batched ``(w, ArtemisState)`` carry buffers to the compiled
+    call so the grid state is updated in place;
+  * optionally routes the Artemis uplink through the fused Pallas kernels
+    (``backend='pallas'``: worker encode + memory update in one HBM pass,
+    server dequant-accumulate via ``ring_sum``).
+
+Bit metering follows the unified rule of DESIGN.md §4 (identical to
+``federated.run``): per round, every active worker pays the uplink message
+plus the downlink catch-up of all updates missed since its last
+participation, capped at one full model (Remark 3).
+
+Compiled executables are cached per (problem, grid statics), so repeated
+calls with new gammas/seeds re-trace zero times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import artemis as art
+from repro.core import compression as comp
+from repro.core.federated import Problem
+
+# incremented inside the traced sweep body: visible side effect only while
+# tracing, so it counts XLA compilations of the grid program
+_TRACE_COUNT = 0
+
+# compiled-cell-program cache: (id(problem), static key) -> jitted fn.
+# Each cached fn closes over its problem's arrays, keeping the id alive (so
+# id-keying cannot alias a new object); bounded LRU so long-lived processes
+# constructing many problems don't pin arrays/executables without limit.
+_COMPILED: "dict" = {}
+_COMPILED_MAX = 32
+
+
+def trace_count() -> int:
+    """Total sweep-program traces so far in this process."""
+    return _TRACE_COUNT
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Grid results, all leading axes [V(ariants), G(ammas), S(eeds)]."""
+    losses: np.ndarray          # [V, G, S, E]  F(w) at each eval point
+    bits: np.ndarray            # [V, G, S, E]  cumulative communicated bits
+    dists: np.ndarray           # [V, G, S, E]  ||w - w*||; ||w|| if no w_star
+    w_final: np.ndarray         # [V, G, S, d]
+    w_avg: np.ndarray           # [V, G, S, d]  Polyak-Ruppert average
+    w_tail_avg: np.ndarray      # [V, G, S, d]  average over the last half
+    eval_iters: np.ndarray      # [E] iteration index k of each eval point
+    traces: int                 # compiles triggered by THIS call (0 if cached)
+
+    def cell(self, v: int, g: int, s: int):
+        """(losses, bits, dists) series of one grid cell."""
+        return self.losses[v, g, s], self.bits[v, g, s], self.dists[v, g, s]
+
+
+def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
+    """One lax.switch branch: full round + unified bit metering for ``cfg``.
+
+    All per-variant constants (compressor table entry, participation p,
+    catch-up window) are baked in statically, so the branch table is the
+    "static compressor table" the grid switches over.
+    """
+    c_up, c_dwn = cfg.compressors()
+    d, n = cfg.dim, cfg.n_workers
+    m1 = float(comp.FP_BITS * d)                 # full-model message
+    m2 = max(c_dwn.bits(d), 1.0)                 # compressed-update message
+    window = max(int(m1 // m2), 1)
+
+    def branch(state, grads, u_act, k_art, last_part, k):
+        active = (u_act < cfg.p).astype(grads.dtype)
+        omega, state, stats = art.artemis_round(cfg, state, grads, k_art,
+                                                active, backend=backend)
+        missed = k - last_part                   # rounds since last download
+        catch = jnp.where(missed > window, m1, missed.astype(jnp.float32) * m2)
+        catch = jnp.sum(active * catch)
+        last_part = jnp.where(active > 0, k, last_part).astype(jnp.int32)
+        bits = stats["uplink_bits"] + catch
+        return omega, state, last_part, bits
+
+    return branch
+
+
+def _static_key(problem: Problem, cfgs, iters, eval_every, batch, full_batch,
+                gamma_decay, backend) -> Tuple:
+    return (id(problem), tuple(repr(c) for c in cfgs), iters, eval_every,
+            batch, full_batch, gamma_decay, backend)
+
+
+def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
+                    iters: int, eval_every: int, batch: int, full_batch: bool,
+                    gamma_decay: bool, backend: Optional[str]):
+    n, d = problem.n_workers, problem.dim
+    n_per = problem.X.shape[1]
+    n_evals = iters // eval_every
+    branches = tuple(_round_branch(cfg, backend) for cfg in cfgs)
+
+    def cell(w0, st0, vi, gamma, key, w_star):
+        """One grid cell: variant ``vi`` at step size ``gamma`` under ``key``."""
+
+        def micro(carry, k):
+            w, st, wsum, wtail, last_part, bits = carry
+            kk = jax.random.fold_in(key, k)
+            k_idx, k_act, k_art = jax.random.split(kk, 3)
+            if full_batch:
+                grads = problem.full_grad(w)
+            else:
+                idx = jax.random.randint(k_idx, (n, batch), 0, n_per)
+                grads = problem.worker_grad(w, idx)
+            u_act = jax.random.uniform(k_act, (n,))
+            omega, st, last_part, round_bits = jax.lax.switch(
+                vi, branches, st, grads, u_act, k_art, last_part, k)
+            g = gamma / jnp.sqrt(k + 1.0) if gamma_decay else gamma
+            w = w - g * omega
+            wtail = wtail + jnp.where(k >= iters // 2, 1.0, 0.0) * w
+            return (w, st, wsum + w, wtail, last_part, bits + round_bits), None
+
+        def outer(carry, e):
+            ks = e * eval_every + jnp.arange(eval_every)
+            carry, _ = jax.lax.scan(micro, carry, ks)
+            w, _, _, _, _, bits = carry
+            loss = problem.global_loss(w)
+            dist = jnp.linalg.norm(w - w_star)
+            return carry, (loss, bits, dist)
+
+        carry0 = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
+                  -jnp.ones((n,), jnp.int32), jnp.zeros((), jnp.float32))
+        (w, _, wsum, wtail, _, _), (losses, bits, dists) = jax.lax.scan(
+            outer, carry0, jnp.arange(n_evals))
+        return (losses, bits, dists, w, wsum / iters,
+                wtail / max(iters - iters // 2, 1))
+
+    def sweep(w0b, st0b, vis, gammas, keys, w_star):
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1                      # runs only while tracing
+        # NOTE: vmap of lax.switch over a batched index evaluates every
+        # branch and selects, so each cell pays V x the round arithmetic.
+        # That is the deliberate trade for compiling the whole grid ONCE:
+        # cells are tiny and retracing dominates (19x measured win on the
+        # paper grid); grouping by variant would cut FLOPs but cost V traces.
+        return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, None))(
+            w0b, st0b, vis, gammas, keys, w_star)
+
+    # donate the batched (w, ArtemisState) carries: the grid state buffers
+    # are consumed by the compiled call instead of being copied
+    return jax.jit(sweep, donate_argnums=(0, 1))
+
+
+def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
+              gammas, seeds, iters: int, *, batch: int = 1,
+              eval_every: int = 1, full_batch: bool = False,
+              w0: Optional[jax.Array] = None,
+              w_star: Optional[jax.Array] = None,
+              gamma_decay: bool = False,
+              backend: Optional[str] = None) -> SweepResult:
+    """Run the full {cfgs} x {gammas} x {seeds} grid in one compiled call.
+
+    Args:
+      problem: the federated Problem (shared by every cell).
+      cfgs: V ArtemisConfigs (one per algorithm variant); all must share
+        ``dim``/``n_workers`` with ``problem``.
+      gammas: G step sizes.
+      seeds: S integer seeds (each becomes an independent PRNG stream), or
+        an [S, 2] stack of explicit uint32 PRNG keys.
+      iters: rounds per cell; must be divisible by ``eval_every``.
+      eval_every: monitoring stride — loss/distance are computed once per
+        ``eval_every`` rounds (1 == per-round, matching ``federated.run``).
+      backend: None -> each cfg's own backend; 'dense'/'pallas' to override.
+
+    Returns a SweepResult with [V, G, S, ...] arrays.
+    """
+    if iters % eval_every != 0:
+        raise ValueError(f"iters={iters} not divisible by eval_every={eval_every}")
+    for cfg in cfgs:
+        if (cfg.dim, cfg.n_workers) != (problem.dim, problem.n_workers):
+            raise ValueError(f"cfg {cfg} does not match problem "
+                             f"(d={problem.dim}, N={problem.n_workers})")
+    d = problem.dim
+    gammas = jnp.asarray(gammas, jnp.float32).reshape(-1)
+    seeds = np.asarray(seeds)
+    if seeds.ndim == 2 and seeds.shape[-1] == 2:     # explicit PRNG keys
+        cell_keys = jnp.asarray(seeds, jnp.uint32)
+    else:
+        cell_keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds.reshape(-1)))
+    V, G, S = len(cfgs), gammas.shape[0], cell_keys.shape[0]
+    C = V * G * S
+
+    key = _static_key(problem, cfgs, iters, eval_every, batch, full_batch,
+                      gamma_decay, backend)
+    if key not in _COMPILED:
+        while len(_COMPILED) >= _COMPILED_MAX:          # bounded LRU
+            _COMPILED.pop(next(iter(_COMPILED)))
+        _COMPILED[key] = _build_sweep_fn(
+            problem, cfgs, iters, eval_every, batch, full_batch, gamma_decay,
+            backend)
+    else:
+        _COMPILED[key] = _COMPILED.pop(key)             # mark recently used
+    fn = _COMPILED[key]
+
+    # flattened grid: variant-major, then gamma, then seed (C-order)
+    vis = jnp.repeat(jnp.arange(V, dtype=jnp.int32), G * S)
+    gms = jnp.tile(jnp.repeat(gammas, S), V)
+    keys = jnp.tile(cell_keys, (V * G, 1))
+
+    w0 = jnp.zeros((d,)) if w0 is None else jnp.asarray(w0)
+    w0b = jnp.broadcast_to(w0, (C, d)).copy()            # donated below
+    st0 = art.init_state(cfgs[0])
+    st0b = jax.tree.map(lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(), st0)
+    ws = jnp.zeros((d,)) if w_star is None else jnp.asarray(w_star)
+
+    before = _TRACE_COUNT
+    with warnings.catch_warnings():
+        # CPU has no donation support; the request still helps on TPU/GPU
+        warnings.filterwarnings("ignore", message="Some donated buffers")
+        losses, bits, dists, w_fin, w_avg, w_tail = jax.block_until_ready(
+            fn(w0b, st0b, vis, gms, keys, ws))
+
+    def _grid(x):
+        return np.asarray(x).reshape((V, G, S) + x.shape[1:])
+
+    return SweepResult(
+        losses=_grid(losses),
+        bits=_grid(bits),
+        dists=_grid(dists),
+        w_final=_grid(w_fin),
+        w_avg=_grid(w_avg),
+        w_tail_avg=_grid(w_tail),
+        eval_iters=np.arange(1, iters // eval_every + 1) * eval_every - 1,
+        traces=_TRACE_COUNT - before,
+    )

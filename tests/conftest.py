@@ -1,0 +1,35 @@
+"""Make ``tests/helpers`` importable as the ``helpers`` package and share
+expensive fixtures across test modules."""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+@pytest.fixture(scope="session")
+def lsr_noiseless_session():
+    from repro.core import federated as fed
+
+    prob, _ = fed.make_lsr_problem(jax.random.PRNGKey(42), n_workers=10,
+                                   n_per=100, d=20, noise=0.0)
+    return prob
+
+
+@pytest.fixture(scope="session")
+def lsr_noisy_session():
+    from repro.core import federated as fed
+
+    prob, _ = fed.make_lsr_problem(jax.random.PRNGKey(42), n_workers=10,
+                                   n_per=100, d=20, noise=0.4)
+    return prob
+
+
+@pytest.fixture(scope="session")
+def logistic_session():
+    from repro.core import federated as fed
+
+    return fed.make_logistic_problem(jax.random.PRNGKey(3), n_workers=10,
+                                     n_per=200, d=2)

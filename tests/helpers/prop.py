@@ -1,0 +1,72 @@
+"""Property-test shim: re-export hypothesis when available, otherwise a
+small seeded-random fallback so the property checks still run (with fixed,
+deterministic examples) when the dependency is missing.
+
+Usage in tests (drop-in for ``from hypothesis import ...``):
+
+    from helpers.prop import given, settings, st, HAVE_HYPOTHESIS
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: draw(rng) -> one example."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimic the hypothesis.strategies namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    # Without hypothesis's shared-shape shrinking/caching, every drawn example
+    # tends to be a fresh jit compile on this suite — cap the fallback count
+    # so the property checks stay cheap (hypothesis, when installed, runs the
+    # full ``max_examples``).
+    _DEFAULT_EXAMPLES = 3
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xA27E715)  # deterministic across runs
+                n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                        _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+
+            # hide the drawn params from pytest's fixture resolution
+            del wrapper.__dict__["__wrapped__"]
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

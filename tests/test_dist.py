@@ -5,7 +5,13 @@ import os
 import subprocess
 import sys
 
+import jax.sharding
 import pytest
+
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="dist scenarios need jax.sharding.AxisType (jax >= 0.5 explicit-"
+           "sharding API); not available in this jax build")
 
 HELPER = os.path.join(os.path.dirname(__file__), "helpers", "dist_scenarios.py")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

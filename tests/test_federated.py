@@ -1,4 +1,8 @@
-"""Integration tests: the paper's convergence claims on the simulator."""
+"""Integration tests: the paper's convergence claims on the simulator.
+
+Variant loops ride ONE ``run_sweep`` grid each (single compile per test);
+the expensive problems come from session-scoped fixtures in conftest.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,83 +10,85 @@ import pytest
 
 from repro.core import artemis as art, federated as fed
 from repro.core import compression as comp
+from repro.core import sweep as sw
 
 KEY = jax.random.PRNGKey(42)
 
 
 @pytest.fixture(scope="module")
-def lsr_noiseless():
-    prob, _ = fed.make_lsr_problem(KEY, n_workers=10, n_per=100, d=20, noise=0.0)
-    return prob
+def lsr_noiseless(lsr_noiseless_session):
+    return lsr_noiseless_session
 
 
 @pytest.fixture(scope="module")
-def lsr_noisy():
-    prob, _ = fed.make_lsr_problem(KEY, n_workers=10, n_per=100, d=20, noise=0.4)
-    return prob
+def lsr_noisy(lsr_noisy_session):
+    return lsr_noisy_session
 
 
 def test_linear_convergence_sigma_star_zero(lsr_noiseless):
-    """Thm 1: sigma_*=0 => linear convergence for ALL variants (E=0 floor)."""
-    for variant in ["sgd", "qsgd", "diana", "biqsgd"]:
-        cfg = art.variant_config(variant, 20, 10)
-        g = fed.gamma_max(lsr_noiseless, cfg)
-        r = fed.run(lsr_noiseless, cfg, gamma=g, iters=400, key=KEY, batch=8)
-        assert r.losses[-1] < 1e-5, (variant, r.losses[-1])
+    """Thm 1: sigma_*=0 => linear convergence for ALL variants (E=0 floor).
+
+    Each variant runs at its own gamma_max: the grid is (4 variants x 4
+    gammas) and the assertion reads the matched diagonal."""
+    variants = ["sgd", "qsgd", "diana", "biqsgd"]
+    cfgs = [art.variant_config(v, 20, 10) for v in variants]
+    gs = [fed.gamma_max(lsr_noiseless, c) for c in cfgs]
+    res = sw.run_sweep(lsr_noiseless, cfgs, gs, [42], iters=400, batch=8,
+                       eval_every=100)
+    for vi, v in enumerate(variants):
+        assert res.losses[vi, vi, 0, -1] < 1e-5, (v, res.losses[vi, vi, 0, -1])
 
 
 def test_saturation_ordering_sigma_star_nonzero(lsr_noisy):
     """Fig 3a: with sigma_* != 0 all algorithms saturate; double compression
     saturates higher than single, higher than SGD (at a shared step size)."""
     gamma = 1.0 / (4 * lsr_noisy.smoothness())
-    floors = {}
-    for variant in ["sgd", "qsgd", "biqsgd"]:
-        cfg = art.variant_config(variant, 20, 10)
-        r = fed.run(lsr_noisy, cfg, gamma=gamma, iters=600, key=KEY, batch=1)
-        floors[variant] = float(np.mean(r.losses[-100:]))
+    variants = ["sgd", "qsgd", "biqsgd"]
+    cfgs = [art.variant_config(v, 20, 10) for v in variants]
+    res = sw.run_sweep(lsr_noisy, cfgs, [gamma], [42], iters=600, batch=1,
+                       eval_every=5)
+    floors = {v: float(np.mean(res.losses[vi, 0, 0, -20:]))
+              for vi, v in enumerate(variants)}
     opt = float(lsr_noisy.global_loss(lsr_noisy.solve_opt()))
     assert floors["sgd"] - opt < floors["qsgd"] - opt < floors["biqsgd"] - opt
 
 
-def test_memory_helps_non_iid():
+def test_memory_helps_non_iid(logistic_session):
     """Fig 3b / S9: non-i.i.d. full-batch (sigma_*=0): memory converges
     linearly, memoryless bidirectional saturates at a high level."""
-    prob = fed.make_logistic_problem(jax.random.PRNGKey(3), n_workers=10, n_per=200, d=2)
+    prob = logistic_session
     gamma = 1.0 / (2 * prob.smoothness())
-    res = {}
-    for variant in ["artemis", "biqsgd"]:
-        cfg = art.variant_config(variant, 2, 10)
-        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
-        res[variant] = r
+    cfgs = [art.variant_config(v, 2, 10) for v in ["artemis", "biqsgd"]]
+    res = sw.run_sweep(prob, cfgs, [gamma], [42], iters=800, full_batch=True,
+                       eval_every=100)
     opt = float(prob.global_loss(prob.solve_opt()))
-    exc_mem = res["artemis"].losses[-1] - opt
-    exc_nomem = res["biqsgd"].losses[-1] - opt
+    exc_mem = res.losses[0, 0, 0, -1] - opt
+    exc_nomem = res.losses[1, 0, 0, -1] - opt
     assert exc_mem < exc_nomem / 5, (exc_mem, exc_nomem)
 
 
-def test_pp2_beats_pp1():
+def test_pp2_beats_pp1(logistic_session):
     """Fig 5/6: partial participation, full gradients, non-iid: PP1 saturates,
     PP2 converges linearly."""
-    prob = fed.make_logistic_problem(jax.random.PRNGKey(5), n_workers=10, n_per=200, d=2)
+    prob = logistic_session
     gamma = 1.0 / (2 * prob.smoothness())
-    res = {}
-    for mode in ["pp1", "pp2"]:
-        cfg = art.ArtemisConfig(dim=2, n_workers=10, up="identity", dwn="identity",
-                                alpha=0.5, p=0.5, pp_mode=mode)
-        r = fed.run(prob, cfg, gamma=gamma, iters=800, key=KEY, full_batch=True)
-        res[mode] = float(np.mean(r.losses[-50:]))
+    cfgs = [art.ArtemisConfig(dim=2, n_workers=10, up="identity",
+                              dwn="identity", alpha=0.5, p=0.5, pp_mode=mode)
+            for mode in ["pp1", "pp2"]]
+    res = sw.run_sweep(prob, cfgs, [gamma], [42], iters=800, full_batch=True,
+                       eval_every=10)
     opt = float(prob.global_loss(prob.solve_opt()))
-    assert res["pp2"] - opt < (res["pp1"] - opt) / 5, res
+    exc = {m: float(np.mean(res.losses[mi, 0, 0, -5:])) - opt
+           for mi, m in enumerate(["pp1", "pp2"])}
+    assert exc["pp2"] < exc["pp1"] / 5, exc
 
 
 def test_bidirectional_bit_savings(lsr_noiseless):
     """App A.1: bi-compression ~ O(sqrt(d) log d) per direction vs O(d)."""
-    bits = {}
-    for variant in ["sgd", "artemis"]:
-        cfg = art.variant_config(variant, 20, 10)
-        r = fed.run(lsr_noiseless, cfg, gamma=0.01, iters=50, key=KEY, batch=4)
-        bits[variant] = r.bits[-1]
-    assert bits["artemis"] < bits["sgd"] / 2
+    cfgs = [art.variant_config(v, 20, 10) for v in ["sgd", "artemis"]]
+    res = sw.run_sweep(lsr_noiseless, cfgs, [0.01], [42], iters=50, batch=4,
+                       eval_every=50)
+    assert res.bits[1, 0, 0, -1] < res.bits[0, 0, 0, -1] / 2
 
 
 def test_polyak_ruppert_tail_average(lsr_noisy):
@@ -109,18 +115,19 @@ def test_gamma_max_formulas(lsr_noisy):
 
 def test_catchup_bit_metering():
     """Remark 3: an absent worker pays missed*M2 bits on return, capped at
-    M1 (the full model) once it has been away longer than floor(M1/M2)."""
+    M1 (the full model) once it has been away > floor(M1/M2) rounds."""
     prob, _ = fed.make_lsr_problem(KEY, n_workers=8, n_per=50, d=20, noise=0.0)
     # full participation vs p=0.3: the PP run pays catch-up on top of uplink
-    cfg_full = art.variant_config("artemis", 20, 8, p=1.0)
-    cfg_pp = art.variant_config("artemis", 20, 8, p=0.3)
-    r_full = fed.run(prob, cfg_full, gamma=0.01, iters=100, key=KEY, batch=4)
-    r_pp = fed.run(prob, cfg_pp, gamma=0.01, iters=100, key=KEY, batch=4)
+    cfgs = [art.variant_config("artemis", 20, 8, p=1.0),
+            art.variant_config("artemis", 20, 8, p=0.3)]
+    res = sw.run_sweep(prob, cfgs, [0.01], [42], iters=100, batch=4,
+                       eval_every=1)
+    bits_full, bits_pp = res.bits[0, 0, 0], res.bits[1, 0, 0]
     # fewer active workers -> less uplink, but catch-up bits are bounded by
     # M1 per return, so total stays within [0, full-participation total]
-    assert 0 < r_pp.bits[-1] < r_full.bits[-1] * 1.5
+    assert 0 < bits_pp[-1] < bits_full[-1] * 1.5
     # catch-up bound sanity: per-round bits never exceed N*(uplink + M1)
-    per_round = np.diff(r_pp.bits)
-    c_up, _ = cfg_pp.compressors()
+    per_round = np.diff(bits_pp)
+    c_up, _ = cfgs[1].compressors()
     cap = 8 * (c_up.bits(20) + comp.FP_BITS * 20)
     assert (per_round <= cap + 1e-6).all()

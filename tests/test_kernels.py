@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.prop import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels import squant as sq
@@ -14,7 +14,7 @@ from repro.kernels import fused_memory as fm
 
 KEY = jax.random.PRNGKey(0)
 
-SHAPES = [(256, 256), (512, 256), (256, 512), (1024, 512)]
+SHAPES = [(256, 256), (512, 256), (256, 512)]
 BLOCKS = [(256, 256), (128, 256)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -101,8 +101,8 @@ def test_ops_roundtrip_shapes(shape):
 def test_ops_unbiased():
     """E[C(x)] = x, checked via per-coordinate z-scores (the per-sample std is
     large by design for s=1: ~scale*sqrt(p))."""
-    n_samp = 600
-    x = jax.random.normal(KEY, (2000,))
+    n_samp = 150
+    x = jax.random.normal(KEY, (768,))
     keys = jax.random.split(jax.random.PRNGKey(1), n_samp)
     outs = jax.vmap(lambda k: ops.compress(k, x, s=1))(keys)
     # projection statistic: t_k = <C_k(x), x>/||x||^2 has mean 1 if unbiased
@@ -169,7 +169,7 @@ def test_property_roundtrip_grid(n, s, seed):
 from repro.kernels import ring_sum as rs
 
 
-@pytest.mark.parametrize("n", [2, 4, 16])
+@pytest.mark.parametrize("n", [2, 4, 8])
 @pytest.mark.parametrize("shape", [(256, 256), (512, 256)])
 def test_ring_sum_matches_ref(n, shape):
     q = jax.random.randint(jax.random.PRNGKey(n), (n,) + shape, -3, 4,

@@ -1,0 +1,195 @@
+"""Sweep-engine tests: grid == per-cell, monitoring stride, single-trace
+compilation, Pallas backend agreement, and the unified bit-metering rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import artemis as art
+from repro.core import compression as comp
+from repro.core import federated as fed
+from repro.core import sweep as sw
+
+KEY = jax.random.PRNGKey(42)
+N, D = 8, 16
+VARIANTS = ["sgd", "qsgd", "artemis"]
+GAMMAS = [0.01, 0.02]
+SEEDS = [0, 1]
+
+
+@pytest.fixture(scope="module")
+def prob():
+    p, _ = fed.make_lsr_problem(KEY, n_workers=N, n_per=50, d=D, noise=0.3)
+    return p
+
+
+@pytest.fixture(scope="module")
+def grid(prob):
+    cfgs = [art.variant_config(v, D, N, p=0.7) for v in VARIANTS]
+    res = sw.run_sweep(prob, cfgs, GAMMAS, SEEDS, iters=60, batch=4,
+                       eval_every=1)
+    return cfgs, res
+
+
+def test_grid_matches_per_cell_run(prob, grid):
+    """Every grid cell reproduces a per-cell ``run`` with the same seed.
+
+    Equality is up to float32 reassociation: the grid program batches the
+    per-cell matmuls (vmap width V*G*S vs 1), which reorders reductions by
+    ~1 ulp/step.  A semantic divergence would show up at 1e-2+.
+    """
+    cfgs, res = grid
+    for vi in range(len(VARIANTS)):
+        for gi, g in enumerate(GAMMAS):
+            for si, s in enumerate(SEEDS):
+                r = fed.run(prob, cfgs[vi], gamma=g, iters=60,
+                            key=jax.random.PRNGKey(s), batch=4)
+                np.testing.assert_allclose(res.losses[vi, gi, si], r.losses,
+                                           rtol=1e-4, atol=1e-6)
+                np.testing.assert_allclose(res.bits[vi, gi, si], r.bits,
+                                           rtol=1e-5)
+
+
+def test_run_is_bitwise_one_cell_sweep(prob):
+    """``run`` IS the engine: a 1-cell sweep returns bit-identical series."""
+    cfg = art.variant_config("artemis", D, N, p=0.7)
+    r = fed.run(prob, cfg, gamma=0.02, iters=40, key=KEY, batch=4)
+    res = sw.run_sweep(prob, [cfg], [0.02], jnp.asarray(KEY)[None], iters=40,
+                       batch=4)
+    assert np.array_equal(res.losses[0, 0, 0], r.losses)
+    assert np.array_equal(res.bits[0, 0, 0], r.bits)
+
+
+def test_matches_legacy_percell_loop(prob):
+    """Cross-check losses AND metered bits against the seed's unbatched scan
+    (run_percell), with partial participation engaged."""
+    cfg = art.variant_config("qsgd", D, N, p=0.4)
+    r_old = fed.run_percell(prob, cfg, gamma=0.02, iters=50, key=KEY, batch=4)
+    r_new = fed.run(prob, cfg, gamma=0.02, iters=50, key=KEY, batch=4)
+    np.testing.assert_allclose(r_new.losses, r_old.losses, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(r_new.bits, r_old.bits, rtol=1e-5)
+
+
+def test_eval_every_is_a_stride(prob, grid):
+    """Thinned monitoring returns exactly every k-th point of the dense run."""
+    cfgs, res1 = grid
+    res5 = sw.run_sweep(prob, cfgs, GAMMAS, SEEDS, iters=60, batch=4,
+                        eval_every=5)
+    assert res5.losses.shape[-1] == 12
+    np.testing.assert_allclose(res5.losses, res1.losses[..., 4::5], rtol=1e-6)
+    np.testing.assert_allclose(res5.bits, res1.bits[..., 4::5], rtol=1e-6)
+    np.testing.assert_array_equal(res5.eval_iters, np.arange(4, 60, 5))
+
+
+def test_whole_grid_compiles_once():
+    """One trace for a fresh grid; zero for new gammas/seeds on the same grid."""
+    p, _ = fed.make_lsr_problem(jax.random.PRNGKey(7), n_workers=4, n_per=30,
+                                d=8, noise=0.1)
+    cfgs = [art.variant_config(v, 8, 4) for v in ["sgd", "qsgd", "artemis",
+                                                  "biqsgd", "diana", "dore"]]
+    res = sw.run_sweep(p, cfgs, [0.01, 0.02, 0.04], [0, 1], iters=20, batch=2)
+    assert res.traces == 1, res.traces
+    res2 = sw.run_sweep(p, cfgs, [0.005, 0.03, 0.1], [2, 3], iters=20, batch=2)
+    assert res2.traces == 0, res2.traces
+
+
+def test_invalid_grid_args(prob):
+    cfg_bad = art.variant_config("sgd", D + 1, N)
+    with pytest.raises(ValueError):
+        sw.run_sweep(prob, [cfg_bad], [0.01], [0], iters=10)
+    cfg = art.variant_config("sgd", D, N)
+    with pytest.raises(ValueError):
+        sw.run_sweep(prob, [cfg], [0.01], [0], iters=10, eval_every=3)
+
+
+# ---------------------------------------------------------------------------
+# backend="pallas"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant,s", [("qsgd", 1), ("artemis", 1),
+                                       ("artemis", 4), ("biqsgd", 2)])
+def test_pallas_round_matches_dense(variant, s):
+    """Fused-kernel round == dense round within 1e-5 for squant configs."""
+    cfg = art.variant_config(variant, D, N, s=s, p=0.6)
+    g = jax.random.normal(KEY, (N, D))
+    st = art.init_state(cfg)._replace(
+        h=0.3 * jax.random.normal(jax.random.PRNGKey(1), (N, D)))
+    act = (jax.random.uniform(jax.random.PRNGKey(2), (N,)) < 0.6
+           ).astype(jnp.float32)
+    o_d, st_d, stats_d = art.artemis_round(cfg, st, g, KEY, act,
+                                           backend="dense")
+    o_p, st_p, stats_p = art.artemis_round(cfg, st, g, KEY, act,
+                                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_p.h), np.asarray(st_d.h),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_p.hbar), np.asarray(st_d.hbar),
+                               atol=1e-5)
+    np.testing.assert_allclose(float(stats_p["compress_err_up"]),
+                               float(stats_d["compress_err_up"]), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_pallas_round_pp1(variant="artemis"):
+    cfg = art.variant_config(variant, D, N, s=2, p=0.5, pp_mode="pp1")
+    g = jax.random.normal(KEY, (N, D))
+    st = art.init_state(cfg)._replace(
+        h=0.2 * jax.random.normal(jax.random.PRNGKey(3), (N, D)))
+    act = (jax.random.uniform(jax.random.PRNGKey(4), (N,)) < 0.5
+           ).astype(jnp.float32)
+    o_d, _, _ = art.artemis_round(cfg, st, g, KEY, act, backend="dense")
+    o_p, _, _ = art.artemis_round(cfg, st, g, KEY, act, backend="pallas")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), atol=1e-5)
+
+
+def test_pallas_backend_rejects_unsupported():
+    g = jnp.ones((N, D))
+    cfg = art.variant_config("sgd", D, N)          # identity uplink
+    with pytest.raises(NotImplementedError):
+        art.artemis_round(cfg, art.init_state(cfg), g, KEY, backend="pallas")
+    cfg_ef = art.variant_config("dore", D, N)      # error feedback
+    with pytest.raises(NotImplementedError):
+        art.artemis_round(cfg_ef, art.init_state(cfg_ef), g, KEY,
+                          backend="pallas")
+
+
+def test_pallas_sweep(prob):
+    """The engine accepts backend='pallas' end-to-end (vmapped kernels)."""
+    cfgs = [art.variant_config("artemis", D, N, s=1)]
+    r_p = sw.run_sweep(prob, cfgs, [0.02], [0], iters=15, batch=4,
+                       backend="pallas")
+    r_d = sw.run_sweep(prob, cfgs, [0.02], [0], iters=15, batch=4,
+                       backend="dense")
+    np.testing.assert_allclose(r_p.losses, r_d.losses, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unified bit metering (Remark 3)
+# ---------------------------------------------------------------------------
+
+def test_metering_full_participation(prob):
+    """p=1: every worker pays uplink + exactly this round's broadcast, every
+    round including the first."""
+    cfg = art.variant_config("artemis", D, N, p=1.0)
+    c_up, c_dwn = cfg.compressors()
+    r = fed.run(prob, cfg, gamma=0.01, iters=20, key=KEY, batch=2)
+    per_round = N * (c_up.bits(D) + max(c_dwn.bits(D), 1.0))
+    expect = per_round * np.arange(1, 21)
+    np.testing.assert_allclose(r.bits, expect, rtol=1e-5)
+
+
+def test_metering_catchup_cap(prob):
+    """p<1: a returning worker pays missed * M2, capped at M1 = 32d once it
+    has been away more than floor(M1/M2) rounds (Remark 3)."""
+    cfg = art.variant_config("artemis", D, N, p=0.15)
+    c_up, c_dwn = cfg.compressors()
+    m1 = comp.FP_BITS * D
+    r = fed.run(prob, cfg, gamma=0.01, iters=120, key=KEY, batch=2)
+    per_round = np.diff(np.concatenate([[0.0], r.bits]))
+    cap = N * (c_up.bits(D) + m1)
+    assert (per_round <= cap + 1e-4).all()
+    # rare participation must trigger the full-model cap at least once:
+    # with p=0.15 the typical gap >> floor(M1/M2) for s=1 quantization
+    window = max(int(m1 // max(c_dwn.bits(D), 1.0)), 1)
+    gaps_over = per_round > c_up.bits(D)  # any active round
+    assert gaps_over.any()
