@@ -1,11 +1,16 @@
 """Distributed benchmarks.
 
-Default suite: the batched sweep engine vs the seed's per-cell Python loop on
-the paper's experiment grid (6 variants x 4 step-sizes x 3 seeds, 200
-rounds).  The per-cell loop re-traces a fresh ``lax.scan`` and evaluates the
-full-batch loss every round for every cell; ``run_sweep`` compiles the whole
-grid ONCE and thins monitoring to an ``eval_every`` stride.  Results are
-written to BENCH_sweep.json so the perf trajectory is tracked across PRs.
+Default suites:
+  * sweep engine — the batched one-trace grid vs the seed's per-cell Python
+    loop on the paper's experiment grid (6 variants x 4 step-sizes x 3
+    seeds, 200 rounds), plus the ``group_by_variant=True`` partitioned mode
+    (V traces, 1x arithmetic — the §5 crossover data).  Written to
+    BENCH_sweep.json.
+  * bucketed ring — the bucketed pipelined compressed wire vs the legacy
+    per-leaf sequential rings, timed end-to-end on a simulated multi-host
+    mesh (subprocess with fake CPU devices; ``bucket_ring_bench.py``) with
+    the compiled HLO's collective bytes checked against the roofline wire
+    model.  Written to BENCH_dist.json.
 
 The legacy host-mesh optimizer-step suite is kept behind a capability guard
 (it needs the explicit-sharding jax API that this container's jax may lack).
@@ -14,6 +19,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -27,6 +34,8 @@ from repro.core import sweep as sw
 FAST = False      # set by benchmarks/run.py --fast: one cell, few iters
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+BENCH_DIST_JSON = os.path.join(os.path.dirname(__file__), "..",
+                               "BENCH_dist.json")
 
 VARIANTS = ["sgd", "qsgd", "diana", "biqsgd", "artemis", "dore"]
 GAMMA_FRACS = [0.125, 0.25, 0.5, 1.0]
@@ -69,6 +78,18 @@ def sweep_engine_suite():
                             eval_every=EVAL_EVERY if not FAST else 1)
     warm_s = time.time() - t0
 
+    # --- grouped mode: V single-variant traces, 1x round arithmetic -------
+    t0 = time.time()
+    res_gcold = sw.run_sweep(prob, cfgs, gammas, seeds, iters, batch=1,
+                             eval_every=EVAL_EVERY if not FAST else 1,
+                             group_by_variant=True)
+    gcold_s = time.time() - t0
+    t0 = time.time()
+    res_gwarm = sw.run_sweep(prob, cfgs, gammas, seeds, iters, batch=1,
+                             eval_every=EVAL_EVERY if not FAST else 1,
+                             group_by_variant=True)
+    gwarm_s = time.time() - t0
+
     report = {
         "grid": {"variants": variants, "n_gammas": len(gammas),
                  "n_seeds": len(seeds), "cells": cells, "iters": iters,
@@ -82,6 +103,10 @@ def sweep_engine_suite():
         "cells_per_sec_warm": round(cells / warm_s, 2),
         "traces_cold": res_cold.traces,
         "traces_warm": res_warm.traces,
+        "grouped_cold_wall_s": round(gcold_s, 3),
+        "grouped_warm_wall_s": round(gwarm_s, 3),
+        "grouped_traces_cold": res_gcold.traces,
+        "grouped_traces_warm": res_gwarm.traces,
         "device": jax.devices()[0].device_kind,
         "jax": jax.__version__,
     }
@@ -99,7 +124,47 @@ def sweep_engine_suite():
         ("sweep/engine_warm", warm_s * 1e6 / (cells * iters),
          f"wall_s={warm_s:.2f} traces={res_warm.traces} "
          f"speedup={percell_s / warm_s:.1f}x"),
+        ("sweep/grouped_cold", gcold_s * 1e6 / (cells * iters),
+         f"wall_s={gcold_s:.2f} traces={res_gcold.traces}"),
+        ("sweep/grouped_warm", gwarm_s * 1e6 / (cells * iters),
+         f"wall_s={gwarm_s:.2f} traces={res_gwarm.traces} "
+         f"vs_batched_warm={warm_s / gwarm_s:.2f}x"),
     ]
+    return rows
+
+
+def bucketed_ring_suite():
+    """Bucketed pipelined ring vs per-leaf sequential rings, end-to-end step
+    time on a simulated multi-host mesh.  Runs ``bucket_ring_bench.py`` in a
+    subprocess (fake-device count must be set before jax initializes) and
+    writes the full report to BENCH_dist.json."""
+    script = os.path.join(os.path.dirname(__file__), "bucket_ring_bench.py")
+    cmd = [sys.executable, script, "--workers", "4" if FAST else "8"]
+    if FAST:
+        cmd.append("--fast")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bucket_ring_bench failed:\n{proc.stderr[-3000:]}")
+    report = json.loads(proc.stdout)
+    with open(BENCH_DIST_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+    rows = []
+    for wire in ("leaf", "bucketed"):
+        w = report["wires"][wire]
+        s8 = w["hlo_collective_bytes"].get("collective-permute/s8", 0)
+        rows.append((f"bucket_ring/{wire}", w["step_us"],
+                     f"hlo_s8_bytes={s8} compile_s={w['compile_s']}"))
+    guard = report["wires"]["bucketed"]["wire_guard"]
+    rows.append(("bucket_ring/speedup", 0.0,
+                 f"bucketed_vs_leaf={report['speedup_bucketed_vs_leaf']}x "
+                 f"wire_guard_ok={guard['ok']} rel_err={guard['rel_err']:.3f}"))
     return rows
 
 
@@ -163,4 +228,4 @@ def dist_step_suite():
     return rows
 
 
-ALL = [sweep_engine_suite, dist_step_suite]
+ALL = [sweep_engine_suite, bucketed_ring_suite, dist_step_suite]

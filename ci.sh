@@ -2,7 +2,9 @@
 # Minimal CI gate. Stages:
 #   1. fast test tier   (tier-1: pytest default set, < 2 min budget)
 #   2. slow test tier   (model-zoo smoke, XLA-compile bound)
-#   3. benchmark smoke  (one grid cell per suite; catches API rot cheaply)
+#   3. benchmark smoke  (one grid cell per suite; catches API rot cheaply;
+#      writes BENCH_dist.json [wire-layer fast numbers] next to
+#      BENCH_sweep.json — committed versions come from a non-fast run)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -1,0 +1,149 @@
+"""Flat fixed-size bucketing of gradient pytrees for the compressed wire.
+
+The mesh backend's wire layer (``core/dist.py``) does not ship one message
+per pytree leaf — it flattens the whole gradient into ``<= max_buckets``
+equal byte-size f32 buckets and ships one contiguous ``int8 levels +
+f32 row-scales`` payload per bucket (DESIGN.md §7).  This module owns the
+*index map* side of that contract:
+
+  * ``make_layout``   — static bucket geometry for a pytree structure:
+                        ``n_buckets`` buckets of ``rows x row`` f32 each,
+                        computed once per (tree, bucket_bytes) at trace time;
+  * ``bucketize``     — leaves -> [B, R, C] f32 (tail zero-padded);
+  * ``unbucketize``   — exact inverse via the stored offsets (padding
+                        dropped, leaf shapes/dtypes restored).
+
+Buckets are always *equal* size: the tail bucket is zero-padded rather than
+shortened, so every ring hop moves the same payload and the pipelined
+schedule has no ragged final step.  The row length ``row`` (wire column
+count C) is the per-row-scale granularity of the bucketed quantizer — the
+per-tile omega rule of DESIGN.md §3 applies with tile size ``row``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+DEFAULT_BUCKET_BYTES = 1 << 16      # 64 KiB of f32 payload per bucket
+DEFAULT_MAX_BUCKETS = 16            # the "<= K" cap of ISSUE 6 / DESIGN §7
+DEFAULT_ROW = 256                   # wire row length C (per-row scale tile)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static index map between a pytree and its [B, R, C] bucket stack."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]   # leaf shapes, flatten order
+    sizes: Tuple[int, ...]                # leaf element counts
+    offsets: Tuple[int, ...]              # leaf start offsets in the flat vec
+    total: int                            # sum(sizes)
+    n_buckets: int                        # B
+    rows: int                             # R
+    row: int                              # C
+
+    @property
+    def bucket_elems(self) -> int:
+        return self.rows * self.row
+
+    @property
+    def padded_total(self) -> int:
+        return self.n_buckets * self.bucket_elems
+
+    @property
+    def pad(self) -> int:
+        return self.padded_total - self.total
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.n_buckets, self.rows, self.row)
+
+    @property
+    def level_bytes(self) -> int:
+        """int8 wire bytes of one worker's levels payload."""
+        return self.padded_total
+
+    @property
+    def scale_bytes(self) -> int:
+        """f32 wire bytes of one worker's per-row scales payload."""
+        return 4 * self.n_buckets * self.rows
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def make_layout(tree: PyTree, *, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                max_buckets: int = DEFAULT_MAX_BUCKETS,
+                row: int = DEFAULT_ROW) -> BucketLayout:
+    """Bucket geometry for ``tree`` (arrays, tracers, or ShapeDtypeStructs).
+
+    The target bucket size is ``bucket_bytes`` of f32 payload, rounded up to
+    a multiple of ``row``; if that would need more than ``max_buckets``
+    buckets, buckets grow so exactly ``max_buckets`` cover the tree.  The
+    same inputs always produce the same layout, so calling this at trace
+    time inside a jitted step is free and deterministic.
+    """
+    if bucket_bytes <= 0 or max_buckets <= 0 or row <= 0:
+        raise ValueError((bucket_bytes, max_buckets, row))
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    total = off
+    if total == 0:
+        raise ValueError("cannot bucketize an empty pytree")
+    elems = _round_up(max(bucket_bytes // 4, row), row)
+    elems = min(elems, _round_up(total, row))    # bucket_bytes=inf -> B=1
+    n_buckets = -(-total // elems)
+    if n_buckets > max_buckets:
+        elems = _round_up(-(-total // max_buckets), row)
+        n_buckets = -(-total // elems)
+    return BucketLayout(treedef=treedef, shapes=shapes, sizes=sizes,
+                        offsets=tuple(offsets), total=total,
+                        n_buckets=n_buckets, rows=elems // row, row=row)
+
+
+def bucketize(layout: BucketLayout, tree: PyTree) -> jax.Array:
+    """Pytree -> [B, R, C] f32 bucket stack (tail zero-padded)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    flat = jnp.concatenate(
+        [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    if layout.pad:
+        flat = jnp.concatenate([flat, jnp.zeros((layout.pad,), jnp.float32)])
+    return flat.reshape(layout.shape)
+
+
+def unbucketize(layout: BucketLayout, buckets: jax.Array,
+                like: Optional[PyTree] = None) -> PyTree:
+    """Exact inverse of ``bucketize`` (padding dropped).
+
+    ``like``: optional pytree whose leaf dtypes the output is cast to.
+    """
+    flat = buckets.reshape(-1)[:layout.total]
+    leaves = [flat[o:o + s].reshape(shape)
+              for o, s, shape in zip(layout.offsets, layout.sizes,
+                                     layout.shapes)]
+    out = jax.tree.unflatten(layout.treedef, leaves)
+    if like is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
+    return out
+
+
+def bucket_keys(key: jax.Array, n_buckets: int) -> jax.Array:
+    """Per-bucket PRNG keys: fold the bucket index into ``key``.
+
+    Keeping one key per bucket (rather than one per leaf) makes the bucketed
+    quantization stream reproducible for a fixed layout — the dense-path
+    equivalence tests replay it outside the mesh program.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_buckets))

@@ -3,23 +3,36 @@
 Workers are slices of the device mesh along ``worker_axes`` (the 'pod' axis on
 the production multi-pod mesh: the slow DCN inter-pod links play the paper's
 bandwidth-constrained uplink/downlink).  The train step is wrapped in a
-*partial-manual* ``jax.shard_map``: worker axes are manual — so ``jax.grad``
+*partial-manual* ``shard_map``: worker axes are manual — so ``jax.grad``
 inside yields the per-worker gradient, un-psum'd — while the remaining
 data/model axes stay auto, letting GSPMD shard the model inside each worker
 exactly as in the uncompressed baseline.
 
-Wire format is real: the uplink all-gathers **int8 levels + per-row f32
-scales** across workers (visible in compiled HLO as int8 collectives — the
-roofline's collective term measures the true byte reduction), then each
-worker dequantizes and reduces locally.  The downlink broadcast costs ZERO
-bytes: every worker compresses the identical aggregate with an identical
-PRNG key (the TPU-native replacement for the server->worker broadcast).
+Wire layer (``wire="bucketed"``, the default — DESIGN.md §7): the gradient
+pytree is flattened into <= K equal byte-size f32 buckets
+(``core/bucketing.py``), each bucket squant-encoded into one contiguous
+``int8 levels + f32 row-scales`` payload, and the payloads move around a
+**pipelined double-buffered ring**: inside a ``lax.scan`` over the N-1 hops,
+hop j's ``ppermute`` of the stacked bucket payload is issued while hop j-1's
+payload is dequant-accumulated by ``kernels/bucket_ring.py`` — the carry
+holds the in-flight payload, so on real hardware the dequant hides under the
+wire latency and the step is bandwidth- (not latency-) bound.  The legacy
+``wire="leaf"`` path keeps the seed's one-ring-per-leaf schedule (N-1
+*sequential* hops per leaf) as the benchmark baseline.
+
+Wire format is real either way: the uplink moves **int8 levels + per-row f32
+scales** across workers (visible in compiled HLO as s8 collective-permutes —
+``launch/roofline.bucketed_wire_model`` predicts the bytes and
+``tests/helpers/bucket_scenarios.py::hlo_wire_guard`` pins them in CI).  The
+downlink broadcast costs ZERO bytes: every worker compresses the identical
+aggregate with an identical PRNG key (the TPU-native replacement for the
+server->worker broadcast).
 
 State per paper Algorithm 1 (PP2):
-  h    — per-worker memory h_i; global layout [W, ...] sharded over the
-         worker axes (each worker owns its slice).
+  h    — per-worker memory h_i; bucketed: one [W, B, R, C] stack sharded
+         over the worker axes (leaf wire: per-leaf [W, ...] trees).
   hbar — server memory \bar h; replicated (every worker updates it with the
-         same psum'd quantity, so it stays bitwise identical).
+         same summed quantity, so it stays bitwise identical).
 """
 from __future__ import annotations
 
@@ -32,9 +45,50 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import bucketing
+from repro.kernels import bucket_ring as BK
+
 PyTree = Any
 
 VARIANTS = ("sgd", "qsgd", "diana", "biqsgd", "artemis", "dore")
+
+WIRES = ("bucketed", "leaf")
+REDUCE_IMPLS = ("pipelined", "sequential", "psum")
+
+
+# ---------------------------------------------------------------------------
+# shard_map compatibility (new jax.shard_map API vs jax<=0.4 experimental)
+# ---------------------------------------------------------------------------
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs,
+                     manual_axes: Sequence[str]):
+    """Partial-manual shard_map on either jax API generation.
+
+    New API: ``jax.shard_map(axis_names=..., check_vma=False)`` — replication
+    of params/hbar across workers holds by construction (aggregate is summed
+    identically; downlink uses a shared PRNG key) but vma tracking cannot see
+    through it.  Old API (jax<=0.4.x): ``jax.experimental.shard_map`` with
+    ``auto = mesh axes - manual`` and ``check_rep=False`` (same reasoning).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
+def make_worker_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Worker-only mesh that works on both jax API generations (tests and
+    benchmarks simulate multi-host rings with fake CPU devices)."""
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +103,20 @@ class DistConfig:
     local_steps: int = 1            # communicate every k steps (Remark 2 /
                                     # Local-SGD direction; 1 = every step)
     seed: int = 17
+    # --- wire layer (DESIGN.md §7) ---
+    wire: str = "bucketed"          # "bucketed" flat ring | legacy "leaf" loop
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+    max_buckets: int = bucketing.DEFAULT_MAX_BUCKETS
+    bucket_row: int = bucketing.DEFAULT_ROW      # per-row-scale tile C
+    reduce_impl: str = "pipelined"  # "pipelined" scan ring | "sequential"
+                                    # unrolled hops | "psum" dense reference
+
+    def __post_init__(self):
+        if self.wire not in WIRES:
+            raise ValueError(f"wire={self.wire!r} not in {WIRES}")
+        if self.reduce_impl not in REDUCE_IMPLS:
+            raise ValueError(
+                f"reduce_impl={self.reduce_impl!r} not in {REDUCE_IMPLS}")
 
     @property
     def up_compress(self) -> bool:
@@ -65,6 +133,15 @@ class DistConfig:
     @property
     def use_ef(self) -> bool:
         return self.error_feedback or self.variant == "dore"
+
+    @property
+    def bucketed(self) -> bool:
+        return self.wire == "bucketed"
+
+    def layout(self, tree: PyTree) -> bucketing.BucketLayout:
+        return bucketing.make_layout(tree, bucket_bytes=self.bucket_bytes,
+                                     max_buckets=self.max_buckets,
+                                     row=self.bucket_row)
 
 
 # ---------------------------------------------------------------------------
@@ -110,20 +187,101 @@ def default_alpha(params: PyTree, s: int) -> float:
     return float(1.0 / (2.0 * (_omega_row(rows, s) + 1.0)))
 
 
+def default_alpha_bucketed(row: int, s: int) -> float:
+    """Thm 1 alpha for the bucketed wire: every row has length ``row``."""
+    return float(1.0 / (2.0 * (_omega_row(row, s) + 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# bucketed ring transports (run INSIDE the worker-manual shard_map)
+# ---------------------------------------------------------------------------
+
+def bucket_encode(key: jax.Array, buckets: jax.Array, s: int):
+    """Per-bucket squant encode: [B, R, C] -> (q int8 [B,R,C], scales
+    [B,R,1] f32), one PRNG key per bucket (``bucketing.bucket_keys``)."""
+    keys = bucketing.bucket_keys(key, buckets.shape[0])
+    return jax.vmap(lambda k, x: squant_encode(k, x, s))(keys, buckets)
+
+
+def bucket_ring_reduce(q: jax.Array, scales: jax.Array,
+                       axes: Tuple[str, ...], n: int, *,
+                       interpret: bool = True) -> jax.Array:
+    """Pipelined double-buffered ring all-reduce of compressed payloads.
+
+    ``lax.scan`` over the N-1 hops; the carry holds the in-flight payload.
+    Each hop issues the next ``ppermute`` *and* dequant-accumulates the
+    payload it currently holds (``kernels/bucket_ring.bucket_acc``) — the
+    two are data-independent inside the step, so the compiler overlaps the
+    collective with the compute (comm hides under dequant or vice versa).
+    Accumulation order (own payload first, then arrivals from w-1, w-2, ...)
+    matches the sequential transport bit-for-bit.
+    """
+    acc = jnp.zeros(q.shape, jnp.float32)
+    if n == 1:
+        return BK.bucket_acc(acc, q, scales, interpret=interpret)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def hop(carry, _):
+        qc, sc, a = carry
+        qn = jax.lax.ppermute(qc, axes, perm)
+        sn = jax.lax.ppermute(sc, axes, perm)
+        a = BK.bucket_acc(a, qc, sc, interpret=interpret)
+        return (qn, sn, a), None
+
+    (ql, sl, acc), _ = jax.lax.scan(hop, (q, scales, acc), None, length=n - 1)
+    return BK.bucket_acc(acc, ql, sl, interpret=interpret)
+
+
+def bucket_ring_reduce_sequential(q: jax.Array, scales: jax.Array,
+                                  axes: Tuple[str, ...], n: int) -> jax.Array:
+    """The pre-bucketing transport applied to the bucket payload: N-1
+    *blocking* hops with a dequant-accumulate stall between each (the
+    per-leaf ring of ``wire="leaf"``, kept as the pipelining baseline)."""
+    acc = squant_decode(q, scales)
+    if n == 1:
+        return acc
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    qr, sr = q, scales
+    for _ in range(n - 1):
+        qr = jax.lax.ppermute(qr, axes, perm)
+        sr = jax.lax.ppermute(sr, axes, perm)
+        acc = acc + squant_decode(qr, sr)
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # Artemis aggregation (runs INSIDE the worker-manual shard_map)
 # ---------------------------------------------------------------------------
 
 class ArtemisDistState(NamedTuple):
-    h: PyTree        # per-worker memories; leaves [W, ...] (worker-sharded)
-    hbar: PyTree     # replicated server memory; leaves [...]
-    e: PyTree        # per-worker EF buffers [W, ...] (Dore; zeros-scalar if off)
-    acc: PyTree      # per-worker local grad accumulator [W, ...] (local_steps>1)
+    h: PyTree        # per-worker memories; bucketed [W, B, R, C] stack
+    hbar: PyTree     # replicated server memory; bucketed [B, R, C]
+    e: PyTree        # per-worker EF buffers (Dore; zeros-scalar stub if off)
+    acc: PyTree      # per-worker local grad accumulator (local_steps > 1)
     step: jax.Array
 
 
 def init_dist_state(cfg: Optional["DistConfig"], params: PyTree,
                     n_workers: int = 1) -> ArtemisDistState:
+    if cfg is not None and cfg.bucketed:
+        shape = cfg.layout(params).shape
+
+        def full(dt):
+            return jnp.zeros((n_workers,) + shape, dt)
+
+        def stub():
+            return jnp.zeros((n_workers,), jnp.float32)
+
+        if cfg.memory:
+            mdt = jnp.dtype(cfg.memory_dtype)
+            h, hbar = full(mdt), jnp.zeros(shape, mdt)
+        else:
+            h, hbar = stub(), jnp.zeros((), jnp.float32)
+        e = full(jnp.float32) if cfg.use_ef else stub()
+        acc = full(jnp.float32) if cfg.local_steps > 1 else stub()
+        return ArtemisDistState(h=h, hbar=hbar, e=e, acc=acc,
+                                step=jnp.zeros((), jnp.int32))
+
     def full(dt):
         return jax.tree.map(lambda p: jnp.zeros((n_workers,) + p.shape, dt),
                             params)
@@ -145,11 +303,94 @@ def init_dist_state(cfg: Optional["DistConfig"], params: PyTree,
                             step=jnp.zeros((), jnp.int32))
 
 
+def _round_keys(cfg: DistConfig, step: jax.Array, wid: jax.Array):
+    """(uplink key — distinct per worker, downlink key — SHARED, active mask).
+
+    Shared by the leaf and bucketed paths so switching the wire never changes
+    the participation pattern or the downlink stream."""
+    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    up_key = jax.random.fold_in(base, wid + 1)
+    dwn_key = jax.random.fold_in(base, 0)
+    if cfg.p_participation < 1.0:
+        act_key = jax.random.fold_in(jax.random.fold_in(base, 999), wid)
+        active = (jax.random.uniform(act_key, ()) < cfg.p_participation
+                  ).astype(jnp.float32)
+    else:
+        active = jnp.float32(1.0)
+    return up_key, dwn_key, active
+
+
+def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
+                               gbuckets: jax.Array,
+                               layout: bucketing.BucketLayout,
+                               n_workers: int, wid: jax.Array):
+    """Bucketed per-worker grads [B, R, C] -> (descent buckets, new state).
+
+    Inside shard_map, where each per-worker state leaf is the local
+    [1, B, R, C] slice.  The uplink sum runs over ``cfg.reduce_impl``:
+    the pipelined scan ring (default), the sequential unrolled ring (the
+    pre-bucketing schedule — bit-identical result), or a dense
+    dequantize-then-psum (the equivalence-test reference).
+    """
+    axes = cfg.worker_axes
+    n = n_workers
+    up_key, dwn_key, active = _round_keys(cfg, state.step, wid)
+    alpha = cfg.alpha if cfg.alpha is not None else (
+        default_alpha_bucketed(layout.row, cfg.s) if cfg.memory else 0.0)
+    p = cfg.p_participation
+    mdt = jnp.dtype(cfg.memory_dtype)
+
+    g32 = gbuckets.astype(jnp.float32)
+    h = state.h[0].astype(jnp.float32) if cfg.memory else jnp.zeros_like(g32)
+    e_buf = state.e[0] if cfg.use_ef else None
+    delta = (g32 - h) * active
+    if cfg.use_ef:
+        delta = delta + e_buf
+
+    if cfg.up_compress:
+        q, scale = bucket_encode(up_key, delta, cfg.s)
+        # PP2: an inactive worker's payload (its EF buffer under Dore) must
+        # contribute EXACTLY zero to the sum — zero the wire scales.
+        scale = scale * active
+        if cfg.reduce_impl == "psum":
+            dhat_sum = jax.lax.psum(squant_decode(q, scale), axes)
+        elif cfg.reduce_impl == "sequential":
+            dhat_sum = bucket_ring_reduce_sequential(q, scale, axes, n)
+        else:
+            dhat_sum = bucket_ring_reduce(q, scale, axes, n)
+        dhat_i = squant_decode(q, scale)
+    else:
+        dhat_i = delta * active
+        dhat_sum = jax.lax.psum(dhat_i, axes)
+
+    if cfg.use_ef:
+        e_new = (active * (delta - dhat_i) + (1 - active) * e_buf)[None]
+    else:
+        e_new = state.e
+    if cfg.memory:
+        hbar = state.hbar.astype(jnp.float32)
+        ghat = hbar + dhat_sum / (p * n)
+        h_new = (h + alpha * dhat_i).astype(mdt)[None]
+        hbar_new = (hbar + alpha * dhat_sum / n).astype(mdt)
+    else:
+        ghat = dhat_sum / (p * n)
+        h_new, hbar_new = state.h, state.hbar
+    if cfg.dwn_compress:
+        # zero-byte broadcast: identical key -> identical compression
+        qd, sd = bucket_encode(dwn_key, ghat, cfg.s)
+        ghat = squant_decode(qd, sd)
+
+    new_state = ArtemisDistState(h_new, hbar_new, e_new, state.acc,
+                                 state.step + 1)
+    return ghat, new_state
+
+
 def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
                       n_workers: int, wid: jax.Array,
                       grad_specs: Optional[PyTree] = None):
-    """Per-worker grads -> (descent direction, new state). Inside shard_map,
-    where each h leaf is the local [1, ...] slice.
+    """Legacy leaf wire: per-worker grads -> (descent direction, new state).
+    One int8 ring per pytree leaf, N-1 sequential hops each.  Inside
+    shard_map, where each h leaf is the local [1, ...] slice.
 
     grad_specs: optional tree of PartitionSpecs (auto axes only) matching
     grads — WITHOUT it GSPMD tends to replicate the int8 payload before the
@@ -157,19 +398,9 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
     EXPERIMENTS.md §Perf iteration 1)."""
     axes = cfg.worker_axes
     n = n_workers
-    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), state.step)
-    up_key = jax.random.fold_in(base, wid + 1)     # distinct per worker
-    dwn_key = jax.random.fold_in(base, 0)          # SHARED across workers
+    up_key, dwn_key, active = _round_keys(cfg, state.step, wid)
     alpha = cfg.alpha if cfg.alpha is not None else (
         default_alpha(grads, cfg.s) if cfg.memory else 0.0)
-
-    # partial participation (PP2): Bernoulli mask per worker per step
-    if cfg.p_participation < 1.0:
-        act_key = jax.random.fold_in(jax.random.fold_in(base, 999), wid)
-        active = (jax.random.uniform(act_key, ()) < cfg.p_participation
-                  ).astype(jnp.float32)
-    else:
-        active = jnp.float32(1.0)
 
     leaves, treedef = jax.tree.flatten(grads)
     h_l = treedef.flatten_up_to(state.h)
@@ -206,6 +437,9 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
             delta = delta + e_buf
         if cfg.up_compress:
             q, scale = squant_encode(jax.random.fold_in(up_key, i), delta, cfg.s)
+            # PP2: an inactive worker's payload (its EF buffer under Dore)
+            # must contribute EXACTLY zero to the ring sum — zero the scales.
+            scale = scale * active
             q = _pin(q, spec_l[i])
             scale = _pin_rows(scale, spec_l[i])
             # ---- the actual wire: an int8 ring. all_gather over a manual
@@ -220,10 +454,10 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
                 sr = jax.lax.ppermute(sr, axes, perm)
                 dhat_sum = dhat_sum + squant_decode(qr, sr)
             dhat_sum = _pin(dhat_sum, spec_l[i])
-            dhat_i = squant_decode(q, scale) * active
+            dhat_i = squant_decode(q, scale)
         else:
-            dhat_sum = jax.lax.psum(delta, axes)
-            dhat_i = delta
+            dhat_i = delta * active
+            dhat_sum = jax.lax.psum(dhat_i, axes)
         if cfg.use_ef:
             # EF accumulates what compression lost (Dore-style)
             out_e.append((active * (delta - dhat_i)
@@ -289,6 +523,8 @@ def make_local_step(model, dcfg: DistConfig, mesh: Mesh):
     direction, realized as gradient accumulation so params stay replicated):
     run this k-1 times between make_train_step's communicating step. ZERO
     inter-worker collectives in its HLO — the roofline-visible comm saving.
+    (Bucketed wire: the accumulator lives in bucket space, so the
+    communicating step folds it in without re-flattening.)
     """
     waxes = dcfg.worker_axes
 
@@ -297,19 +533,20 @@ def make_local_step(model, dcfg: DistConfig, mesh: Mesh):
         bspec = jax.tree.map(lambda _: P(waxes), batch)
         mspec = {"nll": P(), "aux": P()}
 
-        @functools.partial(
-            jax.shard_map, mesh=mesh, in_specs=(sspec, bspec),
-            out_specs=(sspec, (P(), mspec)), axis_names=set(waxes),
-            check_vma=False)
         def inner(st: TrainState, bt):
             (loss, metrics), grads = jax.value_and_grad(
                 model.loss, has_aux=True)(st.params, bt)
-            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype)[None],
-                               st.artemis.acc, grads)
+            if dcfg.bucketed:
+                gb = bucketing.bucketize(dcfg.layout(grads), grads)
+                acc = st.artemis.acc + gb[None]
+            else:
+                acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype)[None],
+                                   st.artemis.acc, grads)
             return (st._replace(artemis=st.artemis._replace(acc=acc)),
                     (loss, metrics))
 
-        return inner(state, batch)
+        return shard_map_compat(inner, mesh, (sspec, bspec),
+                                (sspec, (P(), mspec)), waxes)(state, batch)
 
     return local_fn
 
@@ -319,10 +556,12 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
     """Build (init_state_fn, step_fn).
 
     dcfg=None   -> plain data-parallel baseline (jit only; XLA aggregates).
-    dcfg given  -> Artemis over dcfg.worker_axes via partial-manual shard_map.
+    dcfg given  -> Artemis over dcfg.worker_axes via partial-manual shard_map
+                   (bucketed flat-ring wire by default; dcfg.wire="leaf" for
+                   the legacy per-leaf rings).
     grad_specs  -> PartitionSpec tree (auto axes only) pinning the compressed
-                   payload sharding inside the aggregation (strongly
-                   recommended at scale; see artemis_aggregate).
+                   payload sharding inside the leaf-wire aggregation
+                   (strongly recommended at scale; see artemis_aggregate).
     """
     sizes = _mesh_axis_sizes(mesh)
     n_workers = 1
@@ -340,18 +579,28 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
     def sgd_core(params, opt_state, art, stepno, batch, wid):
         (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
             params, batch)
-        if k_local > 1:
-            # fold in the locally-accumulated gradients since the last sync
-            grads = jax.tree.map(lambda a, g: (a[0] + g) / k_local,
-                                 art.acc, grads)
-            art = art._replace(acc=jax.tree.map(
-                lambda a: jnp.zeros_like(a), art.acc))
-        if dcfg is not None and dcfg.worker_axes:
-            agg, art = artemis_aggregate(dcfg, art, grads, n_workers, wid,
-                                         grad_specs)
+        if dcfg is not None and dcfg.worker_axes and dcfg.bucketed:
+            layout = dcfg.layout(grads)
+            gb = bucketing.bucketize(layout, grads)
+            if k_local > 1:
+                # fold in the locally-accumulated gradients since last sync
+                gb = (art.acc[0] + gb) / k_local
+                art = art._replace(acc=jnp.zeros_like(art.acc))
+            agg_b, art = artemis_aggregate_bucketed(dcfg, art, gb, layout,
+                                                    n_workers, wid)
+            agg = bucketing.unbucketize(layout, agg_b, like=grads)
         else:
-            agg = grads
-            art = art._replace(step=art.step + 1)
+            if k_local > 1:
+                grads = jax.tree.map(lambda a, g: (a[0] + g) / k_local,
+                                     art.acc, grads)
+                art = art._replace(acc=jax.tree.map(
+                    lambda a: jnp.zeros_like(a), art.acc))
+            if dcfg is not None and dcfg.worker_axes:
+                agg, art = artemis_aggregate(dcfg, art, grads, n_workers, wid,
+                                             grad_specs)
+            else:
+                agg = grads
+                art = art._replace(step=art.step + 1)
         updates, opt_state = optimizer.update(agg, opt_state, stepno)
         params = jax.tree.map(lambda pp, u: (pp - u.astype(pp.dtype)).astype(pp.dtype),
                               params, updates)
@@ -378,15 +627,6 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
         bspec = jax.tree.map(lambda _: P(waxes), batch)
         mspec = {"nll": P(), "aux": P()}
 
-        # check_vma=False: replication of params/hbar across workers holds by
-        # construction (aggregate is psum'd; downlink uses a shared PRNG key),
-        # but vma tracking cannot see through it (literal scan carries inside
-        # the model would all need manual pvary casts).
-        @functools.partial(
-            jax.shard_map, mesh=mesh,
-            in_specs=(sspec, bspec),
-            out_specs=(sspec, (P(), mspec)),
-            axis_names=set(waxes), check_vma=False)
         def inner(st: TrainState, bt):
             wid = jnp.zeros((), jnp.int32)
             for a in waxes:
@@ -398,6 +638,7 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
             return (TrainState(params, opt_state, art, st.step + 1),
                     (loss, metrics))
 
-        return inner(state, batch)
+        return shard_map_compat(inner, mesh, (sspec, bspec),
+                                (sspec, (P(), mspec)), waxes)(state, batch)
 
     return init_state, step_fn

@@ -158,7 +158,9 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         # branch and selects, so each cell pays V x the round arithmetic.
         # That is the deliberate trade for compiling the whole grid ONCE:
         # cells are tiny and retracing dominates (19x measured win on the
-        # paper grid); grouping by variant would cut FLOPs but cost V traces.
+        # paper grid).  run_sweep(group_by_variant=True) flips the trade —
+        # V single-variant traces, 1x arithmetic — which wins once per-round
+        # work dwarfs trace cost (big d/iters; crossover in DESIGN.md §5).
         return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, None))(
             w0b, st0b, vis, gammas, keys, w_star)
 
@@ -173,7 +175,8 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
               w0: Optional[jax.Array] = None,
               w_star: Optional[jax.Array] = None,
               gamma_decay: bool = False,
-              backend: Optional[str] = None) -> SweepResult:
+              backend: Optional[str] = None,
+              group_by_variant: bool = False) -> SweepResult:
     """Run the full {cfgs} x {gammas} x {seeds} grid in one compiled call.
 
     Args:
@@ -187,9 +190,27 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
       eval_every: monitoring stride — loss/distance are computed once per
         ``eval_every`` rounds (1 == per-round, matching ``federated.run``).
       backend: None -> each cfg's own backend; 'dense'/'pallas' to override.
+      group_by_variant: partition the grid into V single-variant sub-sweeps
+        sharing the executable cache, instead of one vmap-of-lax.switch
+        program.  Each sub-sweep's switch has ONE branch, so cells pay 1x
+        (not V x) the round arithmetic at the price of V traces on the first
+        call — the win for large problems / long runs (DESIGN.md §5).
+        Results are identical up to f32 batched-reduction reassociation.
 
     Returns a SweepResult with [V, G, S, ...] arrays.
     """
+    if group_by_variant and len(cfgs) > 1:
+        parts = [run_sweep(problem, [cfg], gammas, seeds, iters, batch=batch,
+                           eval_every=eval_every, full_batch=full_batch,
+                           w0=w0, w_star=w_star, gamma_decay=gamma_decay,
+                           backend=backend)
+                 for cfg in cfgs]
+        arr = {f.name: np.concatenate([getattr(p, f.name) for p in parts],
+                                      axis=0)
+               for f in dataclasses.fields(SweepResult)
+               if f.name not in ("eval_iters", "traces")}
+        return SweepResult(eval_iters=parts[0].eval_iters,
+                           traces=sum(p.traces for p in parts), **arr)
     if iters % eval_every != 0:
         raise ValueError(f"iters={iters} not divisible by eval_every={eval_every}")
     for cfg in cfgs:

@@ -1,1 +1,2 @@
-from repro.kernels import ops, ref, squant, fused_memory, ring_sum  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    bucket_ring, fused_memory, ops, ref, ring_sum, squant)

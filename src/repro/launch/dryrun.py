@@ -162,13 +162,34 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, dist_variant: str,
 
 def _state_shardings(mesh, state, pshard, dcfg):
     """Shardings for TrainState: params per policy; h gets a leading worker
-    dim over worker_axes; hbar like params; opt_state like params."""
+    dim over worker_axes; hbar like params; opt_state like params.
+
+    Bucketed wire: the artemis leaves are single stacked arrays, not
+    per-param trees — h/e/acc carry a leading worker dim ([W, B, R, C] or a
+    [W] stub) sharded over the worker axes, hbar ([B, R, C]) is replicated
+    (every worker applies the identical summed update)."""
+    from repro.core.dist import ArtemisDistState, TrainState
+
+    rep = NamedSharding(mesh, P())
+    if dcfg is not None and dcfg.bucketed:
+        waxes = dcfg.worker_axes
+        wsh = NamedSharding(mesh, P(waxes))
+        opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
+            if state.opt_state != () else ()
+        return TrainState(
+            params=pshard, opt_state=opt_sh,
+            artemis=ArtemisDistState(
+                h=jax.tree.map(lambda _: wsh, state.artemis.h),
+                hbar=jax.tree.map(lambda _: rep, state.artemis.hbar),
+                e=jax.tree.map(lambda _: wsh, state.artemis.e),
+                acc=jax.tree.map(lambda _: wsh, state.artemis.acc),
+                step=rep),
+            step=rep)
+
     def shift(ns):
         spec = ns.spec
         waxes = dcfg.worker_axes if dcfg else ()
         return NamedSharding(mesh, P(waxes, *spec))
-
-    rep = NamedSharding(mesh, P())
 
     def worker_tree(struct_tree, full: bool):
         if full:
@@ -186,7 +207,6 @@ def _state_shardings(mesh, state, pshard, dcfg):
                          dcfg is not None and dcfg.local_steps > 1)
     opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
         if state.opt_state != () else ()
-    from repro.core.dist import ArtemisDistState, TrainState
     return TrainState(
         params=pshard, opt_state=opt_sh,
         artemis=ArtemisDistState(h=h_sh, hbar=hbar_sh, e=e_sh, acc=acc_sh,

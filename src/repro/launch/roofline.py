@@ -23,6 +23,8 @@ import numpy as np
 PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
 HBM_BW = 819e9            # bytes/s / chip
 ICI_BW = 50e9             # bytes/s / link (1 effective link per chip assumed)
+COLL_LAT = 2e-6           # per-collective launch/sync latency (s) — the term
+                          # that makes many tiny rings latency-bound
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -67,6 +69,113 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
             continue            # counted at -start
         out[kind] += _shape_bytes(shapes)
     return out
+
+
+def collective_dtype_bytes(hlo_text: str) -> Dict[tuple, int]:
+    """Result-shape bytes keyed by (collective kind, dtype) — the wire-format
+    guard uses this to pin the compressed ring to s8 payloads."""
+    out: Dict[tuple, int] = {}
+    for m in re.finditer(
+            r"%?([\w.\-]*)\s*=\s*(\(?[^=]*?)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+            r"(-start|-done)?\(", hlo_text):
+        name, shapes, kind, phase = m.groups()
+        if phase == "-done":
+            continue            # counted at -start
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            key = (kind, dt)
+            out[key] = out.get(key, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compressed-collective wire models (bucketed pipelined ring vs leaf loop)
+# ---------------------------------------------------------------------------
+
+def bucketed_wire_model(*, n_workers: int, n_buckets: int, rows: int,
+                        row: int, ici_bw: float = ICI_BW,
+                        hbm_bw: float = HBM_BW,
+                        coll_lat: float = COLL_LAT) -> Dict[str, float]:
+    """Collective-bytes + exposed-comm-time model for the bucketed ring
+    (core/dist.bucket_ring_reduce; geometry from core/bucketing.BucketLayout).
+
+    Per hop, ONE stacked payload moves: ``n_buckets*rows*row`` int8 levels
+    plus ``4*n_buckets*rows`` f32 row-scales (two collective-permutes).  The
+    scan body appears ONCE in HLO (``hlo_s8_bytes`` is what a static HLO
+    parse sees) and executes ``n_workers-1`` times (``wire_bytes_per_step``).
+    The pipelined schedule overlaps each hop's wire time with the previous
+    payload's dequant-accumulate, so only ``max(comm, dequant) - dequant``
+    per hop is *exposed*; the sequential schedule exposes all of it.
+    """
+    hops = n_workers - 1
+    level_b = float(n_buckets * rows * row)            # int8 levels
+    scale_b = float(4 * n_buckets * rows)              # f32 per-row scales
+    payload = level_b + scale_b
+    hop_comm = payload / ici_bw + 2 * coll_lat         # q + scale permutes
+    # dequant-accumulate: read q (1B) + scales + acc (4B), write acc (4B)
+    hop_deq = (level_b + scale_b + 8.0 * level_b) / hbm_bw
+    return {
+        "payload_bytes": payload,
+        "hlo_s8_bytes": level_b,
+        "hlo_scale_bytes": scale_b,
+        "wire_bytes_per_step": hops * payload,
+        "comm_s": hops * hop_comm,
+        "dequant_s": n_workers * hop_deq,
+        "step_comm_serial_s": hops * (hop_comm + hop_deq) + hop_deq,
+        "step_comm_pipelined_s": hops * max(hop_comm, hop_deq) + hop_deq,
+        "exposed_comm_s": hops * max(0.0, hop_comm - hop_deq),
+    }
+
+
+def leaf_wire_model(leaf_shapes, *, n_workers: int, ici_bw: float = ICI_BW,
+                    hbm_bw: float = HBM_BW,
+                    coll_lat: float = COLL_LAT) -> Dict[str, float]:
+    """Same accounting for the legacy per-leaf sequential rings: every leaf
+    pays its own N-1 blocking hops (2 collectives + a dequant stall each),
+    and the unrolled hops all appear in static HLO."""
+    hops = n_workers - 1
+    level_b = float(sum(int(np.prod(s)) if s else 1 for s in leaf_shapes))
+    scale_b = float(sum(
+        4 * (int(np.prod(s[:-1])) if len(s) > 1 else 1) for s in leaf_shapes))
+    n_leaves = len(leaf_shapes)
+    payload = level_b + scale_b
+    comm = hops * (payload / ici_bw + 2 * n_leaves * coll_lat)
+    deq = n_workers * (payload + 8.0 * level_b) / hbm_bw
+    return {
+        "payload_bytes": payload,
+        "hlo_s8_bytes": hops * level_b,      # unrolled: every hop is an instr
+        "hlo_scale_bytes": hops * scale_b,
+        "wire_bytes_per_step": hops * payload,
+        "comm_s": comm,
+        "dequant_s": deq,
+        "step_comm_serial_s": comm + deq,
+        "step_comm_pipelined_s": comm + deq,     # nothing overlaps
+        "exposed_comm_s": comm,
+    }
+
+
+def wire_bytes_match(hlo_text: str, model: Dict[str, float], *,
+                     tol: float = 0.10) -> Dict[str, float]:
+    """Measured-vs-model check for the compressed ring's HLO wire format.
+
+    Returns {measured_s8, measured_scale_f32, model_s8, rel_err, ok}; ``ok``
+    requires s8 collective-permute bytes within ``tol`` of the model (the
+    guard that catches the ~256x replication blowup documented in
+    ``artemis_aggregate`` from silently regressing).
+    """
+    by = collective_dtype_bytes(hlo_text)
+    s8 = float(by.get(("collective-permute", "s8"), 0))
+    f32 = float(by.get(("collective-permute", "f32"), 0))
+    want = float(model["hlo_s8_bytes"])
+    rel = abs(s8 - want) / max(want, 1.0)
+    return {"measured_s8": s8, "measured_scale_f32": f32,
+            "model_s8": want, "rel_err": rel, "ok": rel <= tol and s8 > 0}
 
 
 @dataclasses.dataclass

@@ -31,6 +31,53 @@ def test_shape_bytes_tuple():
     assert R._shape_bytes("(f32[4,4], s8[8])") == 64 + 8
 
 
+def test_collective_dtype_bytes_parsing():
+    out = R.collective_dtype_bytes(HLO)
+    assert out[("collective-permute", "s8")] == 32 * 16
+    assert out[("all-gather", "f32")] == 2 * 64 * 128 * 4
+    assert out[("all-gather", "s8")] == 4 * 4          # -start only, not -done
+    assert out[("all-reduce", "bf16")] == 1024 * 2
+    assert ("collective-permute", "f32") not in out
+
+
+def test_bucketed_wire_model_accounting():
+    m = R.bucketed_wire_model(n_workers=4, n_buckets=8, rows=33, row=256)
+    assert m["hlo_s8_bytes"] == 8 * 33 * 256
+    assert m["hlo_scale_bytes"] == 4 * 8 * 33
+    assert m["wire_bytes_per_step"] == 3 * m["payload_bytes"]
+    # pipelining can only help, and the exposed time is what overlap leaves
+    assert m["step_comm_pipelined_s"] <= m["step_comm_serial_s"]
+    assert m["exposed_comm_s"] <= m["comm_s"]
+    # compute-bound regime: wire so fast the dequant fully hides it
+    fast = R.bucketed_wire_model(n_workers=4, n_buckets=8, rows=33, row=256,
+                                 ici_bw=1e18, coll_lat=0.0)
+    assert fast["exposed_comm_s"] == 0.0
+
+
+def test_leaf_wire_model_accounting():
+    shapes = [(64, 64), (64,), (64, 1)]
+    m = R.leaf_wire_model(shapes, n_workers=4)
+    payload_level = 64 * 64 + 64 + 64
+    assert m["hlo_s8_bytes"] == 3 * payload_level     # unrolled hops in HLO
+    assert m["wire_bytes_per_step"] == 3 * m["payload_bytes"]
+    # nothing overlaps on the leaf path
+    assert m["step_comm_pipelined_s"] == m["step_comm_serial_s"]
+    # same bytes, but the per-leaf latency term makes it slower than bucketed
+    b = R.bucketed_wire_model(n_workers=4, n_buckets=1,
+                              rows=payload_level // 64, row=64)
+    assert m["comm_s"] > b["comm_s"]
+
+
+def test_wire_bytes_match_guard():
+    m = {"hlo_s8_bytes": 32 * 16}
+    ok = R.wire_bytes_match(HLO, m)
+    assert ok["ok"] and ok["rel_err"] == 0.0
+    bad = R.wire_bytes_match(HLO, {"hlo_s8_bytes": 32 * 16 * 2})
+    assert not bad["ok"] and bad["rel_err"] == pytest.approx(0.5)
+    none = R.wire_bytes_match("", m)
+    assert not none["ok"]                  # zero measured s8 never passes
+
+
 def test_roofline_terms_and_dominant():
     rl = R.Roofline(arch="a", shape="s", mesh="pod", chips=256, kind="train",
                     hlo_flops=197e12, hlo_bytes=819e9 * 2,

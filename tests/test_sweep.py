@@ -93,6 +93,35 @@ def test_whole_grid_compiles_once():
     assert res2.traces == 0, res2.traces
 
 
+def test_group_by_variant_matches_batched(prob, grid):
+    """group_by_variant=True partitions the grid into V single-variant
+    sub-sweeps; results match the vmap-of-switch program up to f32
+    batched-reduction reassociation (narrower vmap width reorders sums)."""
+    cfgs, res = grid
+    resg = sw.run_sweep(prob, cfgs, GAMMAS, SEEDS, iters=60, batch=4,
+                        eval_every=1, group_by_variant=True)
+    assert resg.losses.shape == res.losses.shape
+    np.testing.assert_allclose(resg.losses, res.losses, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(resg.bits, res.bits, rtol=1e-5)
+    np.testing.assert_allclose(resg.w_final, res.w_final, rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_array_equal(resg.eval_iters, res.eval_iters)
+
+
+def test_group_by_variant_trace_count():
+    """V traces cold, zero on repeat with fresh gammas/seeds (the sub-sweeps
+    share the executable cache)."""
+    p, _ = fed.make_lsr_problem(jax.random.PRNGKey(9), n_workers=4, n_per=30,
+                                d=8, noise=0.1)
+    cfgs = [art.variant_config(v, 8, 4) for v in ["sgd", "qsgd", "artemis"]]
+    res = sw.run_sweep(p, cfgs, [0.01, 0.02], [0, 1], iters=20, batch=2,
+                       group_by_variant=True)
+    assert res.traces == len(cfgs), res.traces
+    res2 = sw.run_sweep(p, cfgs, [0.005, 0.03], [2, 3], iters=20, batch=2,
+                        group_by_variant=True)
+    assert res2.traces == 0, res2.traces
+
+
 def test_invalid_grid_args(prob):
     cfg_bad = art.variant_config("sgd", D + 1, N)
     with pytest.raises(ValueError):
