@@ -17,7 +17,7 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def main() -> None:
-    from benchmarks import dist_bench, kernel_bench, paper_figs
+    from benchmarks import dist_bench, fault_bench, kernel_bench, paper_figs
 
     args = [a for a in sys.argv[1:]]
     fast = "--fast" in args
@@ -26,9 +26,12 @@ def main() -> None:
         dist_bench.FAST = True
         paper_figs.FAST = True
         kernel_bench.FAST = True
+        fault_bench.FAST = True
     only = args[0] if args else None
 
-    suites = paper_figs.ALL + kernel_bench.ALL + dist_bench.ALL
+    # fault_bench last: it merges into the BENCH_dist.json that dist_bench's
+    # bucketed-ring suite rewrites wholesale
+    suites = paper_figs.ALL + kernel_bench.ALL + dist_bench.ALL + fault_bench.ALL
     print("name,us_per_call,derived")
     failures = 0
     for suite in suites:

@@ -5,6 +5,8 @@
 #   3. benchmark smoke  (one grid cell per suite; catches API rot cheaply;
 #      writes BENCH_dist.json [wire-layer fast numbers] next to
 #      BENCH_sweep.json — committed versions come from a non-fast run)
+#   4. fault matrix     (self-healing smoke: inject NaN blowups / huge
+#      finite blowups / wire bit-flips, assert scrubbing + sentinel recover)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,4 +19,7 @@ python -m pytest -x -q -m slow
 
 echo "=== stage 3: benchmark smoke (--fast) ==="
 python benchmarks/run.py --fast
+
+echo "=== stage 4: fault-matrix smoke ==="
+python benchmarks/fault_bench.py --matrix
 echo "CI OK"

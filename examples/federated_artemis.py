@@ -9,6 +9,9 @@ prints the claims being validated:
   3. Fig 3b  — non-i.i.d., full batch: memory removes the B^2 term — Artemis
                converges linearly where Bi-QSGD stalls.
   4. Fig 5/6 — partial participation: PP1 saturates, the novel PP2 does not.
+  5. faults  — beyond the paper's assumptions: NaN blowups, wire bit-flips
+               and sticky (Markov) availability, healed by server scrubbing
+               + the divergence sentinel (DESIGN.md §8).
 
 Every experiment runs its whole variant grid through the batched sweep
 engine (core.sweep.run_sweep): one compiled program per experiment instead
@@ -16,11 +19,14 @@ of one retrace per variant.
 
     PYTHONPATH=src python examples/federated_artemis.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import artemis as art
+from repro.core import faults
 from repro.core import federated as fed
 from repro.core import sweep as sw
 
@@ -93,8 +99,36 @@ def exp4_pp():
           "algorithm) converges linearly")
 
 
+def exp5_faults():
+    print("\n=== 5. beyond Assumption 6: faults + the self-healing server ===")
+    prob, _ = fed.make_lsr_problem(jax.random.PRNGKey(9), n_workers=N,
+                                   n_per=200, d=D, noise=0.4)
+    gamma = 0.5 * fed.gamma_max(prob, art.variant_config("artemis", D, N))
+    base = art.variant_config("artemis", D, N, p=0.5)
+    grid = {
+        "clean (i.i.d. p=0.5)": None,
+        "sticky markov p_stay=0.9": faults.FaultConfig(p_stay=0.9),
+        "nan blowups, scrubbed": faults.FaultConfig(blowup_rate=0.2,
+                                                    scrub=True),
+        "bit-flips + sentinel": faults.FaultConfig(bitflip_rate=0.005,
+                                                   scrub=True, sentinel=20.0,
+                                                   backoff=0.8),
+    }
+    cfgs = [dataclasses.replace(base, faults=fc) for fc in grid.values()]
+    res = sw.run_sweep(prob, cfgs, [gamma], [0], iters=1500, batch=1,
+                       eval_every=10)
+    for fi, name in enumerate(grid):
+        loss = float(res.losses[fi, 0, 0, -1])
+        rb = int(res.rollbacks[fi, 0, 0])
+        print(f"  {name:26s} final loss = {loss:.3f}  rollbacks = {rb}")
+    print("  -> every faulted cell stays finite and tracks the clean run: "
+          "corrupt payloads are reclassified as non-participation (PP2 "
+          "zero-scale), divergences roll back with gamma backoff")
+
+
 if __name__ == "__main__":
     exp1_saturation()
     exp2_linear()
     exp3_memory()
     exp4_pp()
+    exp5_faults()

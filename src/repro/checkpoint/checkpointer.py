@@ -4,6 +4,14 @@ Saves a pytree of jax.Arrays as flattened npz entries keyed by tree path;
 restores onto the caller-provided sharding (device_put per leaf).  No orbax
 in this offline container — the format is deliberately trivial and
 append-only (step-numbered directories + a LATEST pointer).
+
+Crash safety: every file (``arrays.npz``, ``manifest.json``, ``LATEST``) is
+written to a temp name and atomically renamed, and ``LATEST`` is only
+advanced after the step directory is complete — a process killed mid-save
+leaves the previous checkpoint fully readable.  ``restore`` validates the
+manifest (key set, shapes, dtypes) against the target tree up front and
+raises a single clear ``ValueError`` instead of a shape assert deep in
+``device_put``.
 """
 from __future__ import annotations
 
@@ -30,12 +38,30 @@ def _flatten(tree: PyTree):
     return out, treedef
 
 
+def _atomic_write(path: str, write_fn):
+    """Write via a same-directory temp file + atomic rename."""
+    tmp = path + f".tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save(ckpt_dir: str, step: int, tree: PyTree, extra: Optional[dict] = None):
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     flat, _ = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+
+    def _write_npz(tmp):
+        # np.savez appends .npz to names without it; write with an explicit
+        # handle so the temp name is exactly what we rename
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+
+    _atomic_write(os.path.join(d, "arrays.npz"), _write_npz)
     manifest = {
         "step": step,
         "keys": sorted(arrays),
@@ -43,10 +69,21 @@ def save(ckpt_dir: str, step: int, tree: PyTree, extra: Optional[dict] = None):
         "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(d, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
-        f.write(str(step))
+
+    def _write_json(tmp):
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    _atomic_write(os.path.join(d, "manifest.json"), _write_json)
+
+    def _write_latest(tmp):
+        with open(tmp, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+
+    # LATEST moves last: readers never see a pointer to a partial step dir
+    _atomic_write(os.path.join(ckpt_dir, "LATEST"), _write_latest)
     return d
 
 
@@ -58,21 +95,55 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(f.read().strip())
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Load the manifest of ``step`` (default: LATEST) without the arrays."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"missing manifest: {path}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _validate(manifest: dict, flat_like: dict, where: str):
+    keys, like_keys = set(manifest["keys"]), set(flat_like)
+    problems = []
+    missing = sorted(like_keys - keys)
+    unexpected = sorted(keys - like_keys)
+    if missing:
+        problems.append(f"missing keys {missing}")
+    if unexpected:
+        problems.append(f"unexpected keys {unexpected}")
+    for k in sorted(like_keys & keys):
+        ref = flat_like[k]
+        shape = tuple(manifest["shapes"][k])
+        dtype = manifest["dtypes"][k]
+        if shape != tuple(ref.shape):
+            problems.append(f"{k}: shape {shape} != expected {tuple(ref.shape)}")
+        if np.dtype(dtype) != np.dtype(ref.dtype):
+            problems.append(f"{k}: dtype {dtype} != expected {np.dtype(ref.dtype)}")
+    if problems:
+        raise ValueError(
+            f"checkpoint {where} does not match the restore target:\n  "
+            + "\n  ".join(problems))
+
+
 def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None,
             shardings: Optional[PyTree] = None) -> PyTree:
     """Restore into the structure of ``like``; optionally device_put with
-    per-leaf shardings (same treedef as ``like``)."""
+    per-leaf shardings (same treedef as ``like``).  Raises ``ValueError``
+    if the checkpoint's manifest disagrees with ``like`` on keys, shapes,
+    or dtypes."""
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    data = np.load(os.path.join(d, "arrays.npz"))
     flat_like, treedef = _flatten(like)
-    leaves = []
-    for key, ref in flat_like.items():
-        arr = data[key]
-        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
-        leaves.append(arr.astype(ref.dtype))
+    _validate(read_manifest(ckpt_dir, step), flat_like, d)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves = [data[key].astype(flat_like[key].dtype) for key in flat_like]
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
     if shardings is not None:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as comp
+from repro.core import faults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,7 @@ class ArtemisConfig:
     pp_mode: str = "pp2"           # 'pp1' | 'pp2'
     error_feedback: bool = False   # Dore-like EF (beyond paper)
     backend: str = "dense"         # 'dense' | 'pallas' (fused uplink kernels)
+    faults: Optional[faults.FaultConfig] = None  # fault injection + defenses
 
     def compressors(self) -> Tuple[comp.Compressor, comp.Compressor]:
         c_up = comp.make_compressor(self.up, self.dim, **self.up_kwargs)
@@ -96,27 +98,53 @@ def variant_config(variant: str, dim: int, n_workers: int, s: int = 1,
 
 
 def _uplink_dense(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
-                  up_keys: jax.Array, active: jax.Array, alpha: float):
+                  up_keys: jax.Array, active: jax.Array, alpha: float,
+                  fc: faults.FaultConfig, flt_key):
     """Reference uplink: vmap the functional compressor over workers."""
     c_up, _ = cfg.compressors()
     delta = grads - state.h                                # [N,d]
     if cfg.error_feedback:
         delta = delta + state.e
     delta_hat = jax.vmap(c_up)(up_keys, delta)             # [N,d]
+    if not fc.wire_faults:
+        if cfg.error_feedback:
+            new_e = state.e + (grads - state.h) - delta_hat
+            new_e = active * new_e + (1 - active) * state.e
+        else:
+            new_e = state.e
+        # only active workers compress/communicate & update their local memory
+        delta_hat = active * delta_hat
+        new_h = state.h + alpha * delta_hat                # inactive rows unchanged
+        sum_hat = jnp.sum(delta_hat, axis=0)               # [d]
+        return delta_hat, new_h, new_e, sum_hat, jnp.float32(0.0)
+    # --- faulted wire: only sent (active) payloads can be corrupted --------
+    sent = active * delta_hat
+    if fc.bitflip_rate > 0.0:
+        sent = jnp.where(active > 0,
+                         faults.corrupt_f32(flt_key, sent, fc.bitflip_rate),
+                         sent)
+    ok = active
+    if fc.scrub:
+        # non-finite payload row => treat the worker as inactive this round
+        valid = faults.finite_mask(sent, axes=-1)          # [N,1]
+        ok = active * valid
+        sent = faults.nan_to_zero(sent) * valid
     if cfg.error_feedback:
-        new_e = state.e + (grads - state.h) - delta_hat
-        new_e = active * new_e + (1 - active) * state.e
+        new_e = state.e + (grads - state.h) - sent
+        new_e = ok * new_e + (1 - ok) * state.e
     else:
         new_e = state.e
-    # only active workers compress/communicate & update their local memory
-    delta_hat = active * delta_hat
-    new_h = state.h + alpha * delta_hat                    # inactive rows unchanged
-    sum_hat = jnp.sum(delta_hat, axis=0)                   # [d]
-    return delta_hat, new_h, new_e, sum_hat
+    # the fault model corrupts the encoder's output buffer, so the worker
+    # memory tracks exactly what the server accepted (scrubbed rows: nothing)
+    new_h = state.h + alpha * sent
+    sum_hat = jnp.sum(sent, axis=0)
+    scrubbed = jnp.sum(active) - jnp.sum(ok)
+    return sent, new_h, new_e, sum_hat, scrubbed
 
 
 def _uplink_pallas(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
-                   up_keys: jax.Array, active: jax.Array, alpha: float):
+                   up_keys: jax.Array, active: jax.Array, alpha: float,
+                   fc: faults.FaultConfig, flt_key):
     """Fused uplink: worker encode + memory update in one HBM pass
     (kernels/fused_memory.py) and server dequant-accumulate (kernels/ring_sum).
 
@@ -141,13 +169,37 @@ def _uplink_pallas(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
     u = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(up_keys)
     q, scales, h_fused = fused_memory_update(
         grads, state.h, u, alpha, s=s, block=(1, d), interpret=True)
-    # inactive workers neither transmit nor touch their memory
-    new_h = active * h_fused + (1 - active) * state.h
-    act_scales = scales * active                            # [N,1]
+    if not fc.wire_faults:
+        # inactive workers neither transmit nor touch their memory
+        new_h = active * h_fused + (1 - active) * state.h
+        act_scales = scales * active                        # [N,1]
+        sum_hat = ring_sum(q[:, None, :], act_scales[:, :, None],
+                           block=(1, d), interpret=True).reshape(d)
+        delta_hat = q.astype(grads.dtype) * act_scales      # [N,d] decoded
+        return delta_hat, new_h, state.e, sum_hat, jnp.float32(0.0)
+    # --- faulted wire: flip bits of the int8 levels + f32 scales -----------
+    if fc.bitflip_rate > 0.0:
+        kq, ks = jax.random.split(flt_key)
+        q = jnp.where(active > 0,
+                      faults.corrupt_int8(kq, q, fc.bitflip_rate), q)
+        scales = jnp.where(active > 0,
+                           faults.corrupt_f32(ks, scales, fc.bitflip_rate),
+                           scales)
+    ok = active
+    if fc.scrub:
+        # checksum proxy: levels within [-(s+1), s+1] and finite scale, else
+        # the payload is dropped via the same zero-scale path as inactivity
+        valid = faults.payload_valid(q, scales, s + 1, axes=-1)  # [N,1]
+        ok = active * valid
+        scales = faults.nan_to_zero(scales)
+    act_scales = scales * ok                                # [N,1]
     sum_hat = ring_sum(q[:, None, :], act_scales[:, :, None],
                        block=(1, d), interpret=True).reshape(d)
     delta_hat = q.astype(grads.dtype) * act_scales          # [N,d] decoded
-    return delta_hat, new_h, state.e, sum_hat
+    # worker memory tracks the accepted payload (see _uplink_dense)
+    new_h = state.h + alpha * delta_hat
+    scrubbed = jnp.sum(active) - jnp.sum(ok)
+    return delta_hat, new_h, state.e, sum_hat, scrubbed
 
 
 def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
@@ -176,11 +228,17 @@ def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
 
     up_key, dwn_key = jax.random.split(jax.random.fold_in(key, state.step))
     up_keys = jax.random.split(up_key, n)
+    fc = faults.of(cfg.faults)
+    # fault stream branches off the round key via a salt so the base
+    # up/dwn draws are untouched (zero-fault => byte-identical trace)
+    flt_key = (jax.random.fold_in(jax.random.fold_in(key, state.step),
+                                  faults.FAULT_SALT)
+               if fc.wire_faults else None)
 
     # ---- workers: compress gradient differences ---------------------------
     uplink = {"dense": _uplink_dense, "pallas": _uplink_pallas}[backend]
-    delta_hat, new_h, new_e, sum_hat = uplink(cfg, state, grads, up_keys,
-                                              active, alpha)
+    delta_hat, new_h, new_e, sum_hat, scrubbed = uplink(
+        cfg, state, grads, up_keys, active, alpha, fc, flt_key)
 
     # ---- server: reconstruct, aggregate, compress downlink ----------------
     if cfg.pp_mode == "pp2":
@@ -208,5 +266,6 @@ def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
         "compress_err_up": jnp.mean(jnp.sum((delta_hat - active * delta) ** 2, -1)),
         "compress_err_dwn": jnp.sum((omega - ghat) ** 2),
         "ghat_norm": jnp.linalg.norm(ghat),
+        "wire_scrubbed": scrubbed,   # payloads dropped by the server this round
     }
     return omega, ArtemisState(new_h, new_hbar, new_e, state.step + 1), stats

@@ -46,6 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bucketing
+from repro.core import faults as FLT
 from repro.kernels import bucket_ring as BK
 
 PyTree = Any
@@ -110,6 +111,8 @@ class DistConfig:
     bucket_row: int = bucketing.DEFAULT_ROW      # per-row-scale tile C
     reduce_impl: str = "pipelined"  # "pipelined" scan ring | "sequential"
                                     # unrolled hops | "psum" dense reference
+    # --- fault injection + server defenses (core/faults.py, DESIGN.md §8) ---
+    faults: Optional[FLT.FaultConfig] = None
 
     def __post_init__(self):
         if self.wire not in WIRES:
@@ -163,7 +166,9 @@ def squant_encode(key: jax.Array, x: jax.Array, s: int):
     """
     xf = x.astype(jnp.float32)
     norm = _row_norms(xf)
-    scale = norm / s
+    # an all-NaN/Inf row must not ship a NaN scale: clamp to 0 so decode is
+    # exactly 0 (finite) whatever the levels hold (matches kernels/squant.py)
+    scale = jnp.where(jnp.isfinite(norm), norm / s, 0.0)
     safe = jnp.where(norm > 0, norm, 1.0)
     r = jnp.abs(xf) / safe * s
     low = jnp.floor(r)
@@ -258,6 +263,7 @@ class ArtemisDistState(NamedTuple):
     hbar: PyTree     # replicated server memory; bucketed [B, R, C]
     e: PyTree        # per-worker EF buffers (Dore; zeros-scalar stub if off)
     acc: PyTree      # per-worker local grad accumulator (local_steps > 1)
+    prev_active: jax.Array  # [W] last-round availability (Markov chain state)
     step: jax.Array
 
 
@@ -280,6 +286,8 @@ def init_dist_state(cfg: Optional["DistConfig"], params: PyTree,
         e = full(jnp.float32) if cfg.use_ef else stub()
         acc = full(jnp.float32) if cfg.local_steps > 1 else stub()
         return ArtemisDistState(h=h, hbar=hbar, e=e, acc=acc,
+                                prev_active=jnp.zeros((n_workers,),
+                                                      jnp.float32),
                                 step=jnp.zeros((), jnp.int32))
 
     def full(dt):
@@ -300,24 +308,37 @@ def init_dist_state(cfg: Optional["DistConfig"], params: PyTree,
     e = full(jnp.float32) if (cfg is not None and cfg.use_ef) else stub()
     acc = full(jnp.float32) if (cfg is not None and cfg.local_steps > 1) else stub()
     return ArtemisDistState(h=h, hbar=hbar, e=e, acc=acc,
+                            prev_active=jnp.zeros((n_workers,), jnp.float32),
                             step=jnp.zeros((), jnp.int32))
 
 
-def _round_keys(cfg: DistConfig, step: jax.Array, wid: jax.Array):
-    """(uplink key — distinct per worker, downlink key — SHARED, active mask).
+def _round_keys(cfg: DistConfig, step: jax.Array, wid: jax.Array,
+                prev: jax.Array):
+    """(uplink key — distinct per worker, downlink key — SHARED, active mask,
+    availability, fault key).
 
     Shared by the leaf and bucketed paths so switching the wire never changes
-    the participation pattern or the downlink stream."""
+    the participation pattern or the downlink stream.  ``prev`` is this
+    worker's last-round availability (the Markov chain state); ``part`` is
+    this round's availability BEFORE stragglers drop out — the chain evolves
+    on availability, not on who made the deadline."""
+    fc = FLT.of(cfg.faults)
     base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
     up_key = jax.random.fold_in(base, wid + 1)
     dwn_key = jax.random.fold_in(base, 0)
-    if cfg.p_participation < 1.0:
+    # separate salted stream: the base up/dwn/participation draws never move
+    flt_key = jax.random.fold_in(jax.random.fold_in(base, FLT.FAULT_SALT), wid)
+    if cfg.p_participation < 1.0 or fc.markov:
         act_key = jax.random.fold_in(jax.random.fold_in(base, 999), wid)
-        active = (jax.random.uniform(act_key, ()) < cfg.p_participation
-                  ).astype(jnp.float32)
+        u = jax.random.uniform(act_key, ())
+        part = FLT.participation(fc, cfg.p_participation, u, prev, step)
     else:
-        active = jnp.float32(1.0)
-    return up_key, dwn_key, active
+        part = jnp.float32(1.0)
+    active = part
+    if fc.straggler_rate > 0.0:
+        u_s = jax.random.uniform(jax.random.fold_in(flt_key, 1), ())
+        active = active * (u_s >= fc.straggler_rate).astype(jnp.float32)
+    return up_key, dwn_key, active, part, flt_key
 
 
 def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
@@ -334,24 +355,51 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
     """
     axes = cfg.worker_axes
     n = n_workers
-    up_key, dwn_key, active = _round_keys(cfg, state.step, wid)
+    fc = FLT.of(cfg.faults)
+    up_key, dwn_key, active, part, flt_key = _round_keys(
+        cfg, state.step, wid, state.prev_active[0])
     alpha = cfg.alpha if cfg.alpha is not None else (
         default_alpha_bucketed(layout.row, cfg.s) if cfg.memory else 0.0)
     p = cfg.p_participation
     mdt = jnp.dtype(cfg.memory_dtype)
 
     g32 = gbuckets.astype(jnp.float32)
+    if fc.blowup_rate > 0.0:
+        hit = jax.random.bernoulli(jax.random.fold_in(flt_key, 2),
+                                   fc.blowup_rate, ())
+        g32 = jnp.where(hit, jnp.float32(fc.blowup_value), g32)
+    if fc.scrub:
+        # non-finite local gradient => worker masked inactive BEFORE any
+        # arithmetic (0 * NaN is NaN, so the rows are zeroed too)
+        finite = jnp.all(jnp.isfinite(g32)).astype(jnp.float32)
+        active = active * finite
+        g32 = FLT.nan_to_zero(g32)
     h = state.h[0].astype(jnp.float32) if cfg.memory else jnp.zeros_like(g32)
     e_buf = state.e[0] if cfg.use_ef else None
     delta = (g32 - h) * active
     if cfg.use_ef:
         delta = delta + e_buf
 
+    ok = active
     if cfg.up_compress:
         q, scale = bucket_encode(up_key, delta, cfg.s)
         # PP2: an inactive worker's payload (its EF buffer under Dore) must
         # contribute EXACTLY zero to the sum — zero the wire scales.
         scale = scale * active
+        if fc.bitflip_rate > 0.0:
+            # only a payload actually on the wire can pick up flipped bits
+            kq, ks = jax.random.split(jax.random.fold_in(flt_key, 3))
+            q = jnp.where(active > 0,
+                          FLT.corrupt_int8(kq, q, fc.bitflip_rate), q)
+            scale = jnp.where(active > 0,
+                              FLT.corrupt_f32(ks, scale, fc.bitflip_rate),
+                              scale)
+        if fc.scrub:
+            # per-BUCKET checksum: a corrupt bucket is dropped through the
+            # same zero-scale path as inactivity; its h/e slices stay put
+            valid = FLT.payload_valid(q, scale, cfg.s + 1, axes=(1, 2))
+            ok = active * valid                        # [B,1,1] broadcast
+            scale = FLT.nan_to_zero(scale) * valid
         if cfg.reduce_impl == "psum":
             dhat_sum = jax.lax.psum(squant_decode(q, scale), axes)
         elif cfg.reduce_impl == "sequential":
@@ -364,7 +412,7 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
         dhat_sum = jax.lax.psum(dhat_i, axes)
 
     if cfg.use_ef:
-        e_new = (active * (delta - dhat_i) + (1 - active) * e_buf)[None]
+        e_new = (ok * (delta - dhat_i) + (1 - ok) * e_buf)[None]
     else:
         e_new = state.e
     if cfg.memory:
@@ -381,7 +429,7 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
         ghat = squant_decode(qd, sd)
 
     new_state = ArtemisDistState(h_new, hbar_new, e_new, state.acc,
-                                 state.step + 1)
+                                 jnp.reshape(part, (1,)), state.step + 1)
     return ghat, new_state
 
 
@@ -398,7 +446,12 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
     EXPERIMENTS.md §Perf iteration 1)."""
     axes = cfg.worker_axes
     n = n_workers
-    up_key, dwn_key, active = _round_keys(cfg, state.step, wid)
+    fc = FLT.of(cfg.faults)
+    up_key, dwn_key, active, part, flt_key = _round_keys(
+        cfg, state.step, wid, state.prev_active[0])
+    if fc.blowup_rate > 0.0:
+        blow_hit = jax.random.bernoulli(jax.random.fold_in(flt_key, 2),
+                                        fc.blowup_rate, ())
     alpha = cfg.alpha if cfg.alpha is not None else (
         default_alpha(grads, cfg.s) if cfg.memory else 0.0)
 
@@ -430,16 +483,37 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
     out_agg, out_h, out_hbar, out_e = [], [], [], []
     for i, g in enumerate(leaves):
         g32 = g.astype(jnp.float32)
+        act_l = active
+        if fc.blowup_rate > 0.0:
+            g32 = jnp.where(blow_hit, jnp.float32(fc.blowup_value), g32)
+        if fc.scrub:
+            # non-finite leaf => this worker sits the leaf's ring out
+            finite = jnp.all(jnp.isfinite(g32)).astype(jnp.float32)
+            act_l = act_l * finite
+            g32 = FLT.nan_to_zero(g32)
         h = h_l[i][0].astype(jnp.float32) if cfg.memory else jnp.zeros_like(g32)
         e_buf = e_l[i][0] if cfg.use_ef else None
-        delta = (g32 - h) * active
+        delta = (g32 - h) * act_l
         if cfg.use_ef:
             delta = delta + e_buf
+        ok_l = act_l
         if cfg.up_compress:
             q, scale = squant_encode(jax.random.fold_in(up_key, i), delta, cfg.s)
             # PP2: an inactive worker's payload (its EF buffer under Dore)
             # must contribute EXACTLY zero to the ring sum — zero the scales.
-            scale = scale * active
+            scale = scale * act_l
+            if fc.bitflip_rate > 0.0:
+                kq, ks = jax.random.split(jax.random.fold_in(flt_key, 10 + i))
+                q = jnp.where(act_l > 0,
+                              FLT.corrupt_int8(kq, q, fc.bitflip_rate), q)
+                scale = jnp.where(act_l > 0,
+                                  FLT.corrupt_f32(ks, scale, fc.bitflip_rate),
+                                  scale)
+            if fc.scrub:
+                # per-LEAF checksum -> dropped via the zero-scale path
+                valid = FLT.payload_valid(q, scale, cfg.s + 1, axes=None)
+                ok_l = act_l * valid
+                scale = FLT.nan_to_zero(scale) * valid
             q = _pin(q, spec_l[i])
             scale = _pin_rows(scale, spec_l[i])
             # ---- the actual wire: an int8 ring. all_gather over a manual
@@ -456,12 +530,12 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
             dhat_sum = _pin(dhat_sum, spec_l[i])
             dhat_i = squant_decode(q, scale)
         else:
-            dhat_i = delta * active
+            dhat_i = delta * act_l
             dhat_sum = jax.lax.psum(dhat_i, axes)
         if cfg.use_ef:
             # EF accumulates what compression lost (Dore-style)
-            out_e.append((active * (delta - dhat_i)
-                          + (1 - active) * e_buf)[None])
+            out_e.append((ok_l * (delta - dhat_i)
+                          + (1 - ok_l) * e_buf)[None])
         else:
             out_e.append(e_l[i])
         if cfg.memory:
@@ -483,7 +557,8 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
     new_state = ArtemisDistState(jax.tree.unflatten(treedef, out_h),
                                  jax.tree.unflatten(treedef, out_hbar),
                                  jax.tree.unflatten(treedef, out_e),
-                                 state.acc, state.step + 1)
+                                 state.acc, jnp.reshape(part, (1,)),
+                                 state.step + 1)
     return agg, new_state
 
 
@@ -511,6 +586,7 @@ def state_specs(dcfg: Optional[DistConfig], state_struct: TrainState) -> TrainSt
         hbar=jax.tree.map(lambda _: rep, state_struct.artemis.hbar),
         e=jax.tree.map(lambda _: P(waxes), state_struct.artemis.e),
         acc=jax.tree.map(lambda _: P(waxes), state_struct.artemis.acc),
+        prev_active=P(waxes),
         step=rep)
     return TrainState(
         params=jax.tree.map(lambda _: rep, state_struct.params),

@@ -1,0 +1,239 @@
+"""Deterministic fault model for the Artemis stack (DESIGN.md §8).
+
+The paper assumes workers either participate cleanly or not at all
+(Assumption 6: i.i.d. Bernoulli device sampling) and that every payload that
+reaches the server is the payload that was sent.  Real heterogeneous fleets
+break both: availability is *correlated* over rounds (a phone that just went
+offline tends to stay offline), slow devices miss the round deadline, wire
+payloads arrive corrupted, and a worker's local step occasionally blows up
+to NaN/Inf.  ``FaultConfig`` makes all of that a **PRNG-driven, fully traced
+config** that composes into ``ArtemisConfig`` (sweep engine cells) and
+``DistConfig`` (mesh backend, both wires), so whole fault grids compile into
+one program exactly like the fault-free grids do.
+
+Fault taxonomy (all rates are per-round):
+
+  * stragglers       — ``straggler_rate``: an otherwise-available worker
+                       misses the round deadline and is dropped (uplink never
+                       arrives; it pays nothing, downloads catch-up later).
+  * correlated
+    participation    — ``p_stay``: the {0,1} availability of each worker is a
+                       two-state Markov chain with ``P(1->1) = p_stay`` and
+                       ``P(0->1)`` chosen so the stationary distribution stays
+                       ``p`` (the config's participation probability).  With
+                       ``p_stay = p`` both transition rows equal ``p`` and the
+                       chain IS the paper's i.i.d. Bernoulli mask — bit-for-bit,
+                       because the same uniform is compared to the same
+                       threshold.  Lag-1 autocorrelation is
+                       ``(p_stay - p) / (1 - p)``.
+  * wire bit-flips   — ``bitflip_rate``: each element of a transmitted payload
+                       has an independent chance of one random flipped bit
+                       (int8 levels XOR a random bit; f32 scales XOR a random
+                       bit of the IEEE pattern).  Only payloads that were
+                       actually sent (active workers) can be corrupted.
+  * gradient blowups — ``blowup_rate``: a worker's whole stochastic gradient
+                       is replaced by ``blowup_value`` (default NaN; set a
+                       large finite value like 1e30 to exercise the divergence
+                       sentinel instead of the finite-scrubber).
+
+Server-side defenses (the "self-healing" half):
+
+  * ``scrub``        — finite/checksum scrubbing: a payload whose scales are
+                       non-finite/negative or whose int8 levels exceed the
+                       quantizer range ``s`` is *treated as inactive* by
+                       zeroing its wire scales — exactly the PP2
+                       ``scale *= active`` mechanism, so h/hbar/e are left
+                       untouched and the round's algebra is that of a round
+                       the worker sat out.  Non-finite *gradients* are caught
+                       at entry the same way (worker masked inactive).
+  * ``sentinel``     — divergence sentinel (sweep engine): when the monitored
+                       loss or ``||w||`` exceeds ``sentinel`` (or goes
+                       non-finite), the carry is rolled back to the last good
+                       evaluation snapshot and the step size is scaled by
+                       ``backoff`` (geometric), all in-trace.
+
+``FaultConfig()`` (all rates zero, defenses off) is the identity: every code
+path is statically gated on the config, so a zero-fault config produces the
+byte-identical trace — and therefore byte-identical trajectories — as no
+config at all.  This is pinned by tests/test_faults.py on the sweep engine
+and on both mesh wires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# folded into round keys to derive fault-injection streams that never collide
+# with the uplink/downlink/participation streams
+FAULT_SALT = 0x6F175EED
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """PRNG-driven fault injection + server-side defense switches.
+
+    All fields are static at trace time; a grid of FaultConfigs sweeps
+    through ``core.sweep.run_sweep`` like any other config axis.
+    """
+    straggler_rate: float = 0.0     # P(available worker misses the deadline)
+    p_stay: Optional[float] = None  # Markov P(active -> active); None = i.i.d.
+    bitflip_rate: float = 0.0       # per-element P(one random flipped bit)
+    blowup_rate: float = 0.0        # per-worker P(gradient -> blowup_value)
+    blowup_value: float = float("nan")  # NaN, or large finite for sentinel
+    scrub: bool = False             # server finite/checksum scrubbing
+    sentinel: float = 0.0           # loss/||w|| rollback threshold (0 = off)
+    backoff: float = 0.5            # gamma *= backoff on each rollback
+
+    def __post_init__(self):
+        for name in ("straggler_rate", "bitflip_rate", "blowup_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} not in [0, 1]")
+        if self.p_stay is not None and not 0.0 <= self.p_stay <= 1.0:
+            raise ValueError(f"p_stay={self.p_stay} not in [0, 1]")
+        if not 0.0 < self.backoff <= 1.0:
+            raise ValueError(f"backoff={self.backoff} not in (0, 1]")
+
+    # ---- static gates (evaluated at trace time) ---------------------------
+
+    @property
+    def markov(self) -> bool:
+        return self.p_stay is not None
+
+    @property
+    def rollback(self) -> bool:
+        return self.sentinel > 0.0
+
+    @property
+    def wire_faults(self) -> bool:
+        """Anything that touches the uplink payload path."""
+        return self.bitflip_rate > 0.0 or self.scrub
+
+    @property
+    def enabled(self) -> bool:
+        return (self.straggler_rate > 0.0 or self.markov
+                or self.bitflip_rate > 0.0 or self.blowup_rate > 0.0
+                or self.scrub or self.rollback)
+
+
+ZERO = FaultConfig()
+
+
+def of(fc: Optional[FaultConfig]) -> FaultConfig:
+    """None-safe accessor: configs default to ``faults=None`` == all-off."""
+    return ZERO if fc is None else fc
+
+
+# ---------------------------------------------------------------------------
+# correlated (Markov) participation
+# ---------------------------------------------------------------------------
+
+def markov_rates(fc: FaultConfig, p: float) -> Tuple[float, float]:
+    """Transition probabilities (a, b) = (P(1->1), P(0->1)) with stationary
+    participation ``p``.  ``p_stay = p`` gives a == b == p (i.i.d.)."""
+    a = float(fc.p_stay)
+    if p >= 1.0:
+        return a, 1.0
+    b = p * (1.0 - a) / (1.0 - p)
+    if b > 1.0 + 1e-9:
+        raise ValueError(
+            f"Markov participation infeasible: p={p}, p_stay={a} needs "
+            f"P(0->1)={b:.3f} > 1; require p_stay >= (2p-1)/p")
+    return a, min(b, 1.0)
+
+
+def markov_autocorr(fc: FaultConfig, p: float) -> float:
+    """Lag-1 autocorrelation of the stationary availability chain."""
+    if p >= 1.0:
+        return 0.0
+    return (float(fc.p_stay) - p) / (1.0 - p)
+
+
+def participation(fc: FaultConfig, p: float, u: jax.Array, prev: jax.Array,
+                  k: jax.Array) -> jax.Array:
+    """Availability mask from uniforms ``u`` (same stream the i.i.d. mask
+    uses).  ``prev``: previous-round availability (same shape as ``u``);
+    ``k``: round index (round 0 draws from the stationary distribution).
+    Reduces bitwise to ``u < p`` when the chain is off or ``p_stay == p``.
+    """
+    if not fc.markov:
+        return (u < p).astype(jnp.float32)
+    a, b = markov_rates(fc, p)
+    thresh = jnp.where(k == 0, p, jnp.where(prev > 0, a, b))
+    return (u < thresh).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# injection primitives
+# ---------------------------------------------------------------------------
+
+def corrupt_int8(key: jax.Array, q: jax.Array, rate: float) -> jax.Array:
+    """Flip one random bit of each int8 element with probability ``rate``."""
+    kb, km = jax.random.split(key)
+    bit = jax.random.randint(kb, q.shape, 0, 8, dtype=jnp.int32)
+    hit = jax.random.bernoulli(km, rate, q.shape)
+    mask = jnp.left_shift(jnp.uint8(1), bit.astype(jnp.uint8))
+    flipped = jax.lax.bitcast_convert_type(
+        jnp.bitwise_xor(jax.lax.bitcast_convert_type(q, jnp.uint8), mask),
+        jnp.int8)
+    return jnp.where(hit, flipped, q)
+
+
+def corrupt_f32(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
+    """Flip one random bit of each f32 element's IEEE-754 pattern with
+    probability ``rate`` (exponent-bit flips are how NaN/Inf/huge values
+    arrive off a real wire)."""
+    kb, km = jax.random.split(key)
+    bit = jax.random.randint(kb, x.shape, 0, 32, dtype=jnp.int32)
+    hit = jax.random.bernoulli(km, rate, x.shape)
+    pattern = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    flipped = jax.lax.bitcast_convert_type(
+        jnp.bitwise_xor(pattern, jnp.left_shift(jnp.int32(1), bit)),
+        jnp.float32)
+    return jnp.where(hit, flipped, x.astype(jnp.float32))
+
+
+def inject_blowup(fc: FaultConfig, key: jax.Array, grads: jax.Array,
+                  ) -> jax.Array:
+    """Replace whole per-worker gradients ([N, ...]; axis 0 = workers) with
+    ``blowup_value`` at rate ``blowup_rate``."""
+    n = grads.shape[0]
+    hit = jax.random.bernoulli(key, fc.blowup_rate, (n,))
+    hit = hit.reshape((n,) + (1,) * (grads.ndim - 1))
+    return jnp.where(hit, jnp.float32(fc.blowup_value).astype(grads.dtype),
+                     grads)
+
+
+# ---------------------------------------------------------------------------
+# server-side scrubbing
+# ---------------------------------------------------------------------------
+
+def finite_mask(x: jax.Array, axes) -> jax.Array:
+    """1.0 where ``x`` is finite over ``axes`` (keepdims), else 0.0."""
+    return jnp.all(jnp.isfinite(x), axis=axes, keepdims=True
+                   ).astype(jnp.float32)
+
+
+def nan_to_zero(x: jax.Array) -> jax.Array:
+    """Zero the non-finite entries so they cannot poison masked arithmetic
+    (``0 * NaN`` is NaN — masking alone is not enough)."""
+    return jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
+
+
+def payload_valid(q: jax.Array, scale: jax.Array, lmax: int, axes
+                  ) -> jax.Array:
+    """Checksum-style validity of a quantized payload, reduced over ``axes``
+    (keepdims): int8 levels must lie in the legal quantizer range
+    ``[-lmax, lmax]`` (for s-quantization ``lmax = s + 1``) and scales must
+    be finite and non-negative.  The caller multiplies the wire scales by
+    this mask — the corrupt payload then contributes *exactly* zero through
+    the same ``scale *= active`` path PP2 uses for inactive workers, so
+    h/hbar/e stay untouched."""
+    okq = jnp.all(jnp.abs(q.astype(jnp.int32)) <= lmax, axis=axes,
+                  keepdims=True)
+    oks = jnp.all(jnp.isfinite(scale) & (scale >= 0), axis=axes,
+                  keepdims=True)
+    return (okq & oks).astype(scale.dtype)

@@ -24,12 +24,27 @@ Bit metering follows the unified rule of DESIGN.md §4 (identical to
 plus the downlink catch-up of all updates missed since its last
 participation, capped at one full model (Remark 3).
 
+Fault injection & self-healing (DESIGN.md §8): each cfg's
+``ArtemisConfig.faults`` composes into its switch branch — Markov-correlated
+participation, stragglers, gradient blowups (+ entry scrubbing), wire
+corruption (handled inside ``artemis_round``) — and a per-cell divergence
+sentinel at each eval point rolls the carry back to the last good snapshot
+with geometric gamma backoff, all in-trace.  A zero-fault config emits the
+byte-identical program (every fault path is statically gated).
+
+Resumable sweeps: ``run_sweep(checkpoint_dir=...)`` splits the outer scan
+into ``checkpoint_every``-round segments through one compiled segment
+program, snapshotting the batched carry + eval series after each segment
+via ``checkpoint/checkpointer.py``; ``resume=True`` restarts mid-grid
+bitwise (the carry round-trips exactly through npz).
+
 Compiled executables are cached per (problem, grid statics), so repeated
 calls with new gammas/seeds re-trace zero times.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import warnings
 from typing import Optional, Sequence, Tuple
 
@@ -39,7 +54,9 @@ import numpy as np
 
 from repro.core import artemis as art
 from repro.core import compression as comp
+from repro.core import faults
 from repro.core.federated import Problem
+from repro.checkpoint import checkpointer
 
 # incremented inside the traced sweep body: visible side effect only while
 # tracing, so it counts XLA compilations of the grid program
@@ -67,6 +84,8 @@ class SweepResult:
     w_final: np.ndarray         # [V, G, S, d]
     w_avg: np.ndarray           # [V, G, S, d]  Polyak-Ruppert average
     w_tail_avg: np.ndarray      # [V, G, S, d]  average over the last half
+    rollbacks: np.ndarray       # [V, G, S]  divergence-sentinel rollback count
+    gamma_scale: np.ndarray     # [V, G, S]  final backoff multiplier on gamma
     eval_iters: np.ndarray      # [E] iteration index k of each eval point
     traces: int                 # compiles triggered by THIS call (0 if cached)
 
@@ -79,17 +98,37 @@ def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
     """One lax.switch branch: full round + unified bit metering for ``cfg``.
 
     All per-variant constants (compressor table entry, participation p,
-    catch-up window) are baked in statically, so the branch table is the
-    "static compressor table" the grid switches over.
+    catch-up window, fault rates) are baked in statically, so the branch
+    table is the "static compressor table" the grid switches over.
     """
     c_up, c_dwn = cfg.compressors()
+    fc = faults.of(cfg.faults)
+    if fc.markov:
+        faults.markov_rates(fc, cfg.p)   # raise on infeasible chains at build
     d, n = cfg.dim, cfg.n_workers
     m1 = float(comp.FP_BITS * d)                 # full-model message
     m2 = max(c_dwn.bits(d), 1.0)                 # compressed-update message
     window = max(int(m1 // m2), 1)
 
-    def branch(state, grads, u_act, k_art, last_part, k):
-        active = (u_act < cfg.p).astype(grads.dtype)
+    def branch(state, grads, u_act, k_art, last_part, k, prev_act, k_flt):
+        # availability: i.i.d. Bernoulli(p), or the stationary-p Markov chain
+        # (both consume the SAME uniform draw, so p_stay=p is bitwise i.i.d.)
+        part = faults.participation(fc, cfg.p, u_act, prev_act, k)
+        part = part.astype(grads.dtype)
+        active = part
+        if fc.straggler_rate > 0.0:
+            # available but missed the round deadline: drops out of the round
+            u_s = jax.random.uniform(jax.random.fold_in(k_flt, 1), (n,))
+            active = active * (u_s >= fc.straggler_rate).astype(active.dtype)
+        if fc.blowup_rate > 0.0:
+            grads = faults.inject_blowup(fc, jax.random.fold_in(k_flt, 2),
+                                         grads)
+        if fc.scrub:
+            # non-finite gradient => worker masked inactive BEFORE any
+            # arithmetic (0 * NaN is NaN, so zero the rows too)
+            finite = jnp.all(jnp.isfinite(grads), axis=-1).astype(active.dtype)
+            active = active * finite
+            grads = faults.nan_to_zero(grads)
         omega, state, stats = art.artemis_round(cfg, state, grads, k_art,
                                                 active, backend=backend)
         missed = k - last_part                   # rounds since last download
@@ -97,59 +136,155 @@ def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
         catch = jnp.sum(active * catch)
         last_part = jnp.where(active > 0, k, last_part).astype(jnp.int32)
         bits = stats["uplink_bits"] + catch
-        return omega, state, last_part, bits
+        return omega, state, last_part, bits, part
 
     return branch
 
 
 def _static_key(problem: Problem, cfgs, iters, eval_every, batch, full_batch,
-                gamma_decay, backend) -> Tuple:
+                gamma_decay, backend, seg_evals) -> Tuple:
     return (id(problem), tuple(repr(c) for c in cfgs), iters, eval_every,
-            batch, full_batch, gamma_decay, backend)
+            batch, full_batch, gamma_decay, backend, seg_evals)
+
+
+def _sweep_fingerprint(problem: Problem, cfgs, iters, eval_every, batch,
+                       full_batch, gamma_decay, backend, gms, keys, w0,
+                       w_star) -> str:
+    """Stable identity of a sweep for checkpoint resume (id() is not)."""
+    h = hashlib.sha256()
+    h.update(repr((tuple(repr(c) for c in cfgs), iters, eval_every, batch,
+                   full_batch, gamma_decay, backend, problem.kind,
+                   float(problem.reg), tuple(problem.X.shape))).encode())
+    for arr in (problem.X, problem.Y, gms, keys, w0, w_star):
+        h.update(np.asarray(jax.device_get(arr)).tobytes())
+    return h.hexdigest()
 
 
 def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                     iters: int, eval_every: int, batch: int, full_batch: bool,
-                    gamma_decay: bool, backend: Optional[str]):
+                    gamma_decay: bool, backend: Optional[str],
+                    seg_evals: Optional[int] = None):
+    """seg_evals=None: one donated whole-run program (the default).
+    seg_evals=k: a resumable segment program over k eval strides; returns
+    (seg_fn, init_fn, extract_fn)."""
     n, d = problem.n_workers, problem.dim
     n_per = problem.X.shape[1]
     n_evals = iters // eval_every
     branches = tuple(_round_branch(cfg, backend) for cfg in cfgs)
+    # any cell with a sentinel grows the carry by (gamma scale, good
+    # snapshot, rollback count); cells without one keep thresh=0 => never bad
+    any_rollback = any(faults.of(c.faults).rollback for c in cfgs)
+    sent_by_v = np.array([faults.of(c.faults).sentinel for c in cfgs],
+                         np.float32)
+    back_by_v = np.array([faults.of(c.faults).backoff for c in cfgs],
+                         np.float32)
 
-    def cell(w0, st0, vi, gamma, key, w_star):
-        """One grid cell: variant ``vi`` at step size ``gamma`` under ``key``."""
+    def init_carry(w0, st0):
+        base = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
+                -jnp.ones((n,), jnp.int32), jnp.zeros((), jnp.float32),
+                jnp.zeros((n,), jnp.float32))
+        if not any_rollback:
+            return base
+        good0 = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
+                 jnp.zeros((n,), jnp.float32), problem.global_loss(w0))
+        return base + (jnp.ones(()), good0, jnp.zeros((), jnp.int32))
+
+    def make_outer(vi, gamma, key, w_star):
+        """The eval-stride scan body of one grid cell."""
 
         def micro(carry, k):
-            w, st, wsum, wtail, last_part, bits = carry
+            if any_rollback:
+                (w, st, wsum, wtail, last_part, bits, prev_act,
+                 gscale, good, rb) = carry
+            else:
+                w, st, wsum, wtail, last_part, bits, prev_act = carry
             kk = jax.random.fold_in(key, k)
             k_idx, k_act, k_art = jax.random.split(kk, 3)
+            # fault stream: salted off kk so the base draws are untouched
+            k_flt = jax.random.fold_in(kk, faults.FAULT_SALT)
             if full_batch:
                 grads = problem.full_grad(w)
             else:
                 idx = jax.random.randint(k_idx, (n, batch), 0, n_per)
                 grads = problem.worker_grad(w, idx)
             u_act = jax.random.uniform(k_act, (n,))
-            omega, st, last_part, round_bits = jax.lax.switch(
-                vi, branches, st, grads, u_act, k_art, last_part, k)
+            omega, st, last_part, round_bits, prev_act = jax.lax.switch(
+                vi, branches, st, grads, u_act, k_art, last_part, k,
+                prev_act, k_flt)
             g = gamma / jnp.sqrt(k + 1.0) if gamma_decay else gamma
+            if any_rollback:
+                g = g * gscale               # exact no-op while gscale == 1
             w = w - g * omega
             wtail = wtail + jnp.where(k >= iters // 2, 1.0, 0.0) * w
-            return (w, st, wsum + w, wtail, last_part, bits + round_bits), None
+            base = (w, st, wsum + w, wtail, last_part, bits + round_bits,
+                    prev_act)
+            if any_rollback:
+                return base + (gscale, good, rb), None
+            return base, None
+
+        if any_rollback:
+            thr = jnp.asarray(sent_by_v)[vi]
+            bo = jnp.asarray(back_by_v)[vi]
 
         def outer(carry, e):
             ks = e * eval_every + jnp.arange(eval_every)
             carry, _ = jax.lax.scan(micro, carry, ks)
-            w, _, _, _, _, bits = carry
+            if not any_rollback:
+                w, _, _, _, _, bits, _ = carry
+                loss = problem.global_loss(w)
+                dist = jnp.linalg.norm(w - w_star)
+                return carry, (loss, bits, dist)
+            (w, st, wsum, wtail, last_part, bits, prev_act,
+             gscale, good, rb) = carry
             loss = problem.global_loss(w)
+            # NaN/Inf compare False => bad; thr == 0 disables the sentinel
+            ok = (loss <= thr) & (jnp.linalg.norm(w) <= thr)
+            bad = (thr > 0) & ~ok
+            cur = (w, st, wsum, wtail, prev_act, loss)
+            w, st, wsum, wtail, prev_act, loss = jax.tree.map(
+                lambda gl, cl: jnp.where(bad, gl, cl), good, cur)
+            gscale = jnp.where(bad, gscale * bo, gscale)
+            rb = rb + bad.astype(jnp.int32)
+            # post-select, (w, ...) IS the last good state either way
+            good = (w, st, wsum, wtail, prev_act, loss)
             dist = jnp.linalg.norm(w - w_star)
+            carry = (w, st, wsum, wtail, last_part, bits, prev_act,
+                     gscale, good, rb)
             return carry, (loss, bits, dist)
 
-        carry0 = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
-                  -jnp.ones((n,), jnp.int32), jnp.zeros((), jnp.float32))
-        (w, _, wsum, wtail, _, _), (losses, bits, dists) = jax.lax.scan(
-            outer, carry0, jnp.arange(n_evals))
-        return (losses, bits, dists, w, wsum / iters,
-                wtail / max(iters - iters // 2, 1))
+        return outer
+
+    def extract(carry):
+        """Final per-cell results from a (possibly batched) carry."""
+        if any_rollback:
+            w, _, wsum, wtail, _, _, _, gscale, _, rb = carry
+        else:
+            w, _, wsum, wtail, _, _, _ = carry
+            rb = jnp.zeros(w.shape[:-1], jnp.int32)
+            gscale = jnp.ones(w.shape[:-1], jnp.float32)
+        return (w, wsum / iters, wtail / max(iters - iters // 2, 1),
+                rb, gscale)
+
+    if seg_evals is not None:
+        def cell_seg(carry, vi, gamma, key, w_star, e0):
+            outer = make_outer(vi, gamma, key, w_star)
+            es = e0 + jnp.arange(seg_evals)
+            return jax.lax.scan(outer, carry, es)
+
+        def sweep_seg(carry, vis, gammas, keys, w_star, e0):
+            global _TRACE_COUNT
+            _TRACE_COUNT += 1                  # runs only while tracing
+            return jax.vmap(cell_seg, in_axes=(0, 0, 0, 0, None, None))(
+                carry, vis, gammas, keys, w_star, e0)
+
+        # no donation: the carry must stay alive to be checkpointed after
+        # every segment call
+        return jax.jit(sweep_seg), init_carry, extract
+
+    def cell(w0, st0, vi, gamma, key, w_star):
+        """One grid cell: variant ``vi`` at step size ``gamma`` under ``key``."""
+        outer = make_outer(vi, gamma, key, w_star)
+        return jax.lax.scan(outer, init_carry(w0, st0), jnp.arange(n_evals))
 
     def sweep(w0b, st0b, vis, gammas, keys, w_star):
         global _TRACE_COUNT
@@ -165,8 +300,11 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
             w0b, st0b, vis, gammas, keys, w_star)
 
     # donate the batched (w, ArtemisState) carries: the grid state buffers
-    # are consumed by the compiled call instead of being copied
-    return jax.jit(sweep, donate_argnums=(0, 1))
+    # are consumed by the compiled call instead of being copied.  extract
+    # runs OUTSIDE the jit (like the segmented path) so w_avg/w_tail_avg
+    # come off the exact same division in both modes — fusing the divide
+    # into the cell program moves them by an ulp vs the segmented run.
+    return jax.jit(sweep, donate_argnums=(0, 1)), extract
 
 
 def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
@@ -176,7 +314,10 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
               w_star: Optional[jax.Array] = None,
               gamma_decay: bool = False,
               backend: Optional[str] = None,
-              group_by_variant: bool = False) -> SweepResult:
+              group_by_variant: bool = False,
+              checkpoint_dir: Optional[str] = None,
+              checkpoint_every: Optional[int] = None,
+              resume: bool = False) -> SweepResult:
     """Run the full {cfgs} x {gammas} x {seeds} grid in one compiled call.
 
     Args:
@@ -196,9 +337,26 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         (not V x) the round arithmetic at the price of V traces on the first
         call — the win for large problems / long runs (DESIGN.md §5).
         Results are identical up to f32 batched-reduction reassociation.
+      checkpoint_dir: enable resumable mode — run the sweep in segments and
+        snapshot the batched carry + eval series after each one.  The
+        trajectory is bitwise identical to the plain run (same scan body;
+        f32/int32 round-trip exactly through npz).
+      checkpoint_every: rounds between snapshots (default ``eval_every``);
+        must divide ``iters`` and be a multiple of ``eval_every``.
+      resume: restart from the latest snapshot in ``checkpoint_dir`` if one
+        exists (validated against a sweep fingerprint; a foreign checkpoint
+        raises ValueError).  No snapshot -> fresh start.
 
     Returns a SweepResult with [V, G, S, ...] arrays.
     """
+    if checkpoint_dir is not None and group_by_variant:
+        raise ValueError("checkpointing is not supported with "
+                         "group_by_variant=True (V independent sub-sweeps "
+                         "would race on one checkpoint directory)")
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True requires checkpoint_dir")
+    if checkpoint_every is not None and checkpoint_dir is None:
+        raise ValueError("checkpoint_every requires checkpoint_dir")
     if group_by_variant and len(cfgs) > 1:
         parts = [run_sweep(problem, [cfg], gammas, seeds, iters, batch=batch,
                            eval_every=eval_every, full_batch=full_batch,
@@ -217,6 +375,15 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         if (cfg.dim, cfg.n_workers) != (problem.dim, problem.n_workers):
             raise ValueError(f"cfg {cfg} does not match problem "
                              f"(d={problem.dim}, N={problem.n_workers})")
+    seg_evals = None
+    if checkpoint_dir is not None:
+        checkpoint_every = eval_every if checkpoint_every is None \
+            else checkpoint_every
+        if checkpoint_every % eval_every != 0 or iters % checkpoint_every != 0:
+            raise ValueError(
+                f"checkpoint_every={checkpoint_every} must be a multiple of "
+                f"eval_every={eval_every} and divide iters={iters}")
+        seg_evals = checkpoint_every // eval_every
     d = problem.dim
     gammas = jnp.asarray(gammas, jnp.float32).reshape(-1)
     seeds = np.asarray(seeds)
@@ -228,13 +395,13 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
     C = V * G * S
 
     key = _static_key(problem, cfgs, iters, eval_every, batch, full_batch,
-                      gamma_decay, backend)
+                      gamma_decay, backend, seg_evals)
     if key not in _COMPILED:
         while len(_COMPILED) >= _COMPILED_MAX:          # bounded LRU
             _COMPILED.pop(next(iter(_COMPILED)))
         _COMPILED[key] = _build_sweep_fn(
             problem, cfgs, iters, eval_every, batch, full_batch, gamma_decay,
-            backend)
+            backend, seg_evals)
     else:
         _COMPILED[key] = _COMPILED.pop(key)             # mark recently used
     fn = _COMPILED[key]
@@ -251,14 +418,24 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
     ws = jnp.zeros((d,)) if w_star is None else jnp.asarray(w_star)
 
     before = _TRACE_COUNT
-    with warnings.catch_warnings():
-        # CPU has no donation support; the request still helps on TPU/GPU
-        warnings.filterwarnings("ignore", message="Some donated buffers")
-        losses, bits, dists, w_fin, w_avg, w_tail = jax.block_until_ready(
-            fn(w0b, st0b, vis, gms, keys, ws))
+    if seg_evals is not None:
+        losses, bits, dists, w_fin, w_avg, w_tail, rb, gscale = \
+            _run_segmented(fn, problem, cfgs, iters, eval_every, batch,
+                           full_batch, gamma_decay, backend, seg_evals,
+                           checkpoint_dir, resume, w0b, st0b, vis, gms, keys,
+                           w0, ws, C)
+    else:
+        sweep_fn, extract = fn
+        with warnings.catch_warnings():
+            # CPU has no donation support; the request still helps on TPU/GPU
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            carry, (losses, bits, dists) = jax.block_until_ready(
+                sweep_fn(w0b, st0b, vis, gms, keys, ws))
+        w_fin, w_avg, w_tail, rb, gscale = extract(carry)
 
     def _grid(x):
-        return np.asarray(x).reshape((V, G, S) + x.shape[1:])
+        x = np.asarray(x)
+        return x.reshape((V, G, S) + x.shape[1:])
 
     return SweepResult(
         losses=_grid(losses),
@@ -267,6 +444,55 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         w_final=_grid(w_fin),
         w_avg=_grid(w_avg),
         w_tail_avg=_grid(w_tail),
+        rollbacks=_grid(rb),
+        gamma_scale=_grid(gscale),
         eval_iters=np.arange(1, iters // eval_every + 1) * eval_every - 1,
         traces=_TRACE_COUNT - before,
     )
+
+
+def _run_segmented(fn, problem, cfgs, iters, eval_every, batch, full_batch,
+                   gamma_decay, backend, seg_evals, checkpoint_dir, resume,
+                   w0b, st0b, vis, gms, keys, w0, ws, C):
+    """Drive the segment program checkpoint-to-checkpoint (see run_sweep)."""
+    seg_fn, init_carry, extract = fn
+    n_evals = iters // eval_every
+    n_segs = n_evals // seg_evals
+    fp = _sweep_fingerprint(problem, cfgs, iters, eval_every, batch,
+                            full_batch, gamma_decay, backend, gms, keys,
+                            w0, ws)
+    carry = jax.vmap(init_carry)(w0b, st0b)
+    series = {k: np.zeros((C, n_evals), np.float32)
+              for k in ("losses", "bits", "dists")}
+    e_done = 0
+    if resume and checkpointer.latest_step(checkpoint_dir) is not None:
+        man = checkpointer.read_manifest(checkpoint_dir)
+        extra = man.get("extra", {})
+        if extra.get("fingerprint") != fp:
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir} belongs to a different "
+                f"sweep (fingerprint mismatch); refusing to resume")
+        like = {"carry": carry,
+                "series": {k: jnp.zeros((C, n_evals), jnp.float32)
+                           for k in series}}
+        tree = checkpointer.restore(checkpoint_dir, like)
+        carry = tree["carry"]
+        for k in series:
+            series[k][:] = np.asarray(tree["series"][k])
+        e_done = int(extra["e_done"])
+    for si in range(e_done // seg_evals, n_segs):
+        e0 = si * seg_evals
+        carry, (l, b, dd) = seg_fn(carry, vis, gms, keys, ws,
+                                   jnp.asarray(e0, jnp.int32))
+        jax.block_until_ready(carry)
+        sl = slice(e0, e0 + seg_evals)
+        series["losses"][:, sl] = np.asarray(l)
+        series["bits"][:, sl] = np.asarray(b)
+        series["dists"][:, sl] = np.asarray(dd)
+        e_done = e0 + seg_evals
+        checkpointer.save(
+            checkpoint_dir, e_done, {"carry": carry, "series": series},
+            extra={"fingerprint": fp, "e_done": e_done, "n_evals": n_evals})
+    w_fin, w_avg, w_tail, rb, gscale = extract(carry)
+    return (series["losses"], series["bits"], series["dists"],
+            w_fin, w_avg, w_tail, rb, gscale)

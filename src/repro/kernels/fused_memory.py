@@ -28,7 +28,9 @@ def _fused_kernel(g_ref, h_ref, u_ref, alpha_ref, q_ref, scale_ref, h_new_ref,
     h = h_ref[...]
     delta = (g - h).astype(jnp.float32)
     norm = jnp.sqrt(jnp.sum(delta * delta))
-    scale = norm / s
+    # non-finite tile => zero scale: wire payload decodes to 0 and the memory
+    # update below degrades to h_new = h (matches squant.py's clamp)
+    scale = jnp.where(jnp.isfinite(norm), norm / s, 0.0)
     scale_ref[0, 0] = scale
     safe = jnp.where(norm > 0, norm, 1.0)
     r = jnp.abs(delta) / safe * s

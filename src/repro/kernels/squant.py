@@ -30,7 +30,9 @@ def _encode_kernel(x_ref, u_ref, q_ref, scale_ref, *, s: int):
     # norms & thresholds in f32 regardless of input dtype (bf16-safe)
     x = x_ref[...].astype(jnp.float32)
     norm = jnp.sqrt(jnp.sum(x * x))
-    scale_ref[0, 0] = norm / s
+    # an all-NaN/Inf tile must not ship a NaN scale: clamp to 0 so decode is
+    # exactly 0 (finite) no matter what the int8 levels hold
+    scale_ref[0, 0] = jnp.where(jnp.isfinite(norm), norm / s, 0.0)
     safe = jnp.where(norm > 0, norm, 1.0)
     r = jnp.abs(x) / safe * s
     low = jnp.floor(r)

@@ -183,6 +183,7 @@ def _state_shardings(mesh, state, pshard, dcfg):
                 hbar=jax.tree.map(lambda _: rep, state.artemis.hbar),
                 e=jax.tree.map(lambda _: wsh, state.artemis.e),
                 acc=jax.tree.map(lambda _: wsh, state.artemis.acc),
+                prev_active=wsh,
                 step=rep),
             step=rep)
 
@@ -207,10 +208,11 @@ def _state_shardings(mesh, state, pshard, dcfg):
                          dcfg is not None and dcfg.local_steps > 1)
     opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
         if state.opt_state != () else ()
+    waxes_sh = NamedSharding(mesh, P(dcfg.worker_axes if dcfg else ()))
     return TrainState(
         params=pshard, opt_state=opt_sh,
         artemis=ArtemisDistState(h=h_sh, hbar=hbar_sh, e=e_sh, acc=acc_sh,
-                                 step=rep),
+                                 prev_active=waxes_sh, step=rep),
         step=rep)
 
 

@@ -21,6 +21,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import checkpointer
 from repro.core import dist
+from repro.core import faults
 from repro.data.pipeline import ShardedBatches
 from repro.data.synthetic import TokenStream, TokenStreamConfig
 from repro.launch import mesh as M
@@ -48,8 +49,25 @@ def main(argv=None):
                     help="mesh shape, e.g. 4x2 => data=4, model=2")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from ckpt-dir/LATEST if present (without "
+                         "this flag an existing checkpoint is ignored)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--log-file", default=None)
+    # --- fault injection + self-healing (core/faults.py, DESIGN.md §8) ---
+    ap.add_argument("--straggler-rate", type=float, default=0.0)
+    ap.add_argument("--p-stay", type=float, default=None,
+                    help="Markov P(active->active); default i.i.d.")
+    ap.add_argument("--bitflip-rate", type=float, default=0.0)
+    ap.add_argument("--blowup-rate", type=float, default=0.0)
+    ap.add_argument("--blowup-value", type=float, default=float("nan"))
+    ap.add_argument("--scrub", action="store_true",
+                    help="server-side finite/checksum payload scrubbing")
+    ap.add_argument("--sentinel", type=float, default=0.0,
+                    help="loss threshold: blown-up loss rolls back to the "
+                         "last checkpoint with lr backoff (0 = off)")
+    ap.add_argument("--backoff", type=float, default=0.5)
+    ap.add_argument("--max-rollbacks", type=int, default=3)
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
@@ -62,11 +80,17 @@ def main(argv=None):
     else:
         mesh = M.make_host_mesh()
 
+    fc = faults.FaultConfig(
+        straggler_rate=args.straggler_rate, p_stay=args.p_stay,
+        bitflip_rate=args.bitflip_rate, blowup_rate=args.blowup_rate,
+        blowup_value=args.blowup_value, scrub=args.scrub,
+        sentinel=args.sentinel, backoff=args.backoff)
     dcfg = None
     if args.dist != "none":
         dcfg = dist.DistConfig(worker_axes=(args.workers,), variant=args.dist,
                                s=args.s, p_participation=args.participation,
-                               local_steps=args.local_steps)
+                               local_steps=args.local_steps,
+                               faults=fc if fc.enabled else None)
 
     opt = adam(args.lr) if args.optimizer == "adam" else sgd(args.lr)
     params = model.init(jax.random.PRNGKey(0))
@@ -89,30 +113,59 @@ def main(argv=None):
         params = jax.device_put(params, pshard)
         state = init_state(params)
         jstep = jax.jit(step_fn)
-        if args.ckpt_dir and checkpointer.latest_step(args.ckpt_dir) is not None:
+        if (args.resume and args.ckpt_dir
+                and checkpointer.latest_step(args.ckpt_dir) is not None):
+            # one restore, one (re)trace: the killed run's state slots into
+            # the same jitted step, so resuming compiles exactly once
             state = checkpointer.restore(args.ckpt_dir, state)
             print(f"restored step {int(state.step)}")
 
         logs = []
         t0 = time.time()
         jlocal = jax.jit(local_fn) if local_fn else None
-        for i in range(args.steps):
+        # host-side divergence sentinel: last good state + geometric lr backoff
+        good_state, lr_scale, rollbacks = state, 1.0, 0
+        start = int(state.step)
+        i = start
+        while i < start + args.steps:
             batch = batches.batch_at(i)
             if jlocal is not None and (i + 1) % args.local_steps:
                 state, (loss, metrics) = jlocal(state, batch)
             else:
                 state, (loss, metrics) = jstep(state, batch)
-            if i % args.log_every == 0 or i == args.steps - 1:
+            if i % args.log_every == 0 or i == start + args.steps - 1:
                 loss_f = float(loss)
+                bad = not np.isfinite(loss_f) or (
+                    args.sentinel > 0 and loss_f > args.sentinel)
+                if bad and args.sentinel > 0:
+                    rollbacks += 1
+                    if rollbacks > args.max_rollbacks:
+                        raise RuntimeError(
+                            f"loss diverged {rollbacks} times; giving up")
+                    lr_scale *= args.backoff
+                    state = good_state
+                    opt2 = (adam(args.lr * lr_scale)
+                            if args.optimizer == "adam"
+                            else sgd(args.lr * lr_scale))
+                    _, step_fn2 = dist.make_train_step(model, opt2, dcfg,
+                                                       mesh, grad_specs=gspecs)
+                    jstep = jax.jit(step_fn2)
+                    print({"rollback": rollbacks, "to_step": int(state.step),
+                           "lr_scale": lr_scale})
+                    i = int(state.step)
+                    continue
                 rec = {"step": int(state.step), "loss": round(loss_f, 4),
                        "nll": round(float(metrics["nll"]), 4),
-                       "wall_s": round(time.time() - t0, 1)}
+                       "wall_s": round(time.time() - t0, 1),
+                       "rollbacks": rollbacks}
                 logs.append(rec)
                 print(rec)
                 assert np.isfinite(loss_f), "loss diverged"
+                good_state = state
             if (args.ckpt_every and args.ckpt_dir
                     and int(state.step) % args.ckpt_every == 0):
                 checkpointer.save(args.ckpt_dir, int(state.step), state)
+            i += 1
         if args.ckpt_dir:
             checkpointer.save(args.ckpt_dir, int(state.step), state)
     if args.log_file:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bucketing, dist
+from repro.core import bucketing, dist, faults
 from repro.launch import roofline
 from repro.models.toy import ToyMLP
 from repro.optim import sgd
@@ -30,7 +30,7 @@ VARIANTS = list(dist.VARIANTS)
 def _setup(variant="artemis", *, wire="bucketed", reduce_impl="pipelined",
            mesh_shape=(2, 2), axes=("p", "q"), p=1.0, s=3,
            bucket_bytes=4096, max_buckets=8, row=64, local_steps=1,
-           error_feedback=False):
+           error_feedback=False, fault_cfg=None):
     mesh = dist.make_worker_mesh(mesh_shape, axes)
     model = ToyMLP(n_layers=4, d=64)
     params = model.init(jax.random.PRNGKey(0))
@@ -39,7 +39,7 @@ def _setup(variant="artemis", *, wire="bucketed", reduce_impl="pipelined",
                            reduce_impl=reduce_impl, bucket_bytes=bucket_bytes,
                            max_buckets=max_buckets, bucket_row=row,
                            local_steps=local_steps,
-                           error_feedback=error_feedback)
+                           error_feedback=error_feedback, faults=fault_cfg)
     init_state, step_fn = dist.make_train_step(model, sgd(0.05), dcfg, mesh)
     batch = model.batch(jax.random.PRNGKey(1), n=32)
     return mesh, model, params, dcfg, init_state, step_fn, batch
@@ -158,6 +158,43 @@ def scenario_bucketed_convergence():
     colls = re.findall(r"(all-reduce|all-gather|collective-permute|"
                        r"reduce-scatter|all-to-all)\(", hlo)
     assert not colls, f"bucketed local step must not communicate: {colls[:5]}"
+
+
+def scenario_fault_zero_bitwise():
+    """Zero-fault identity on the mesh backend: DistConfig(faults=
+    FaultConfig()) — every rate zero, defenses off — produces bit-identical
+    trajectories to faults=None on BOTH wires.  The fault paths are all
+    statically gated and their PRNG streams salted, so the config's mere
+    presence must not move a bit."""
+    for wire in dist.WIRES:
+        out = {}
+        for fc in (None, faults.FaultConfig()):
+            state, loss = _run("artemis", wire=wire, p=0.5, fault_cfg=fc)
+            out[fc is None] = (jax.tree.map(np.asarray, state.params), loss)
+        for a, b in zip(jax.tree.leaves(out[True][0]),
+                        jax.tree.leaves(out[False][0])):
+            np.testing.assert_array_equal(a, b, err_msg=wire)
+        assert out[True][1] == out[False][1], wire
+
+
+def scenario_fault_matrix():
+    """Fault matrix x both wires: wire bit-flips, NaN gradient blowups, and
+    a straggler burst over sticky Markov participation — each with server
+    scrubbing on — must keep training finite (corrupt => inactive via the
+    PP2 zero-scale path)."""
+    matrix = {
+        "bitflip": faults.FaultConfig(bitflip_rate=0.02, scrub=True),
+        "nan_blowup": faults.FaultConfig(blowup_rate=0.5, scrub=True),
+        "dropout_burst": faults.FaultConfig(straggler_rate=0.5, p_stay=0.8,
+                                            scrub=True),
+    }
+    for wire in dist.WIRES:
+        for name, fc in matrix.items():
+            state, loss = _run("artemis", wire=wire, p=0.5, steps=4,
+                               fault_cfg=fc)
+            assert np.isfinite(loss), (wire, name, loss)
+            for leaf in jax.tree.leaves(state.params):
+                assert np.all(np.isfinite(np.asarray(leaf))), (wire, name)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,8 @@ SCENARIOS = [
     "ef_pp_inactive_zero",
     "hlo_wire_guard",
     "bucketed_convergence",
+    "fault_zero_bitwise",
+    "fault_matrix",
 ]
 
 
