@@ -18,6 +18,13 @@ Partial participation: ``active`` is a {0,1} mask of shape [N].
          ghat = hbar + (1/(pN)) sum_S Delta_hat_i ;  hbar += (alpha/N) sum_S Delta_hat_i.
 
 Error feedback (beyond paper, Dore-style) is available via ``error_feedback=True``.
+
+Both uplinks and the downlink dispatch on registered ``core/codec.py``
+codecs: the dense path vmaps the codec round-trip (any registered operator —
+sparsify, topk, tile_squant...), while ``backend="pallas"`` rides the fused
+kernels for codecs that declare the matching ``fused_uplink`` family and
+falls back to the dense path for the rest (no more hard-fails on
+``cfg.up != "squant"``; EF is supported on both).
 """
 from __future__ import annotations
 
@@ -27,16 +34,19 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import codec as wire
 from repro.core import compression as comp
 from repro.core import faults
+
+BACKENDS = ("dense", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
 class ArtemisConfig:
     dim: int
     n_workers: int
-    up: str = "squant"            # uplink compressor name
-    dwn: str = "squant"           # downlink compressor name
+    up: str = "squant"            # uplink codec name (core/codec.py registry)
+    dwn: str = "squant"           # downlink codec name
     up_kwargs: dict = dataclasses.field(default_factory=dict)
     dwn_kwargs: dict = dataclasses.field(default_factory=dict)
     alpha: Optional[float] = None  # memory rate; None -> 1/(2(omega_up+1)); 0 disables
@@ -46,15 +56,20 @@ class ArtemisConfig:
     backend: str = "dense"         # 'dense' | 'pallas' (fused uplink kernels)
     faults: Optional[faults.FaultConfig] = None  # fault injection + defenses
 
-    def compressors(self) -> Tuple[comp.Compressor, comp.Compressor]:
-        c_up = comp.make_compressor(self.up, self.dim, **self.up_kwargs)
-        c_dwn = comp.make_compressor(self.dwn, self.dim, **self.dwn_kwargs)
+    def codecs(self) -> Tuple[wire.Codec, wire.Codec]:
+        # kwargs may be a dict or a (hashable) tuple of (key, value) pairs
+        c_up = wire.make_codec(self.up, self.dim, **dict(self.up_kwargs))
+        c_dwn = wire.make_codec(self.dwn, self.dim, **dict(self.dwn_kwargs))
         return c_up, c_dwn
+
+    def compressors(self) -> Tuple[comp.Compressor, comp.Compressor]:
+        c_up, c_dwn = self.codecs()
+        return comp.from_codec(c_up), comp.from_codec(c_dwn)
 
     def resolved_alpha(self) -> float:
         if self.alpha is not None:
             return float(self.alpha)
-        c_up, _ = self.compressors()
+        c_up, _ = self.codecs()
         if c_up.omega == 0.0:
             return 0.0   # no uplink compression -> memory unnecessary by default
         return 1.0 / (2.0 * (c_up.omega + 1.0))
@@ -97,16 +112,19 @@ def variant_config(variant: str, dim: int, n_workers: int, s: int = 1,
                          up_kwargs={"s": s}, dwn_kwargs={"s": s}, **kw)
 
 
-def _uplink_dense(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
-                  up_keys: jax.Array, active: jax.Array, alpha: float,
-                  fc: faults.FaultConfig, flt_key):
-    """Reference uplink: vmap the functional compressor over workers."""
-    c_up, _ = cfg.compressors()
+def _uplink_dense(cfg: ArtemisConfig, c_up: wire.Codec, state: ArtemisState,
+                  grads: jax.Array, up_keys: jax.Array, active: jax.Array,
+                  alpha: float, fc: faults.FaultConfig, flt_key):
+    """Reference uplink: vmap the codec round-trip over workers.  Works for
+    EVERY registered codec — the faulted wire corrupts and validates the
+    payload representation itself (levels/indices/scales), not the decoded
+    value, so an index bit-flip on a sparsify payload is as real as a scale
+    flip on squant."""
     delta = grads - state.h                                # [N,d]
     if cfg.error_feedback:
         delta = delta + state.e
-    delta_hat = jax.vmap(c_up)(up_keys, delta)             # [N,d]
     if not fc.wire_faults:
+        delta_hat = jax.vmap(c_up)(up_keys, delta)         # [N,d]
         if cfg.error_feedback:
             new_e = state.e + (grads - state.h) - delta_hat
             new_e = active * new_e + (1 - active) * state.e
@@ -118,17 +136,18 @@ def _uplink_dense(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
         sum_hat = jnp.sum(delta_hat, axis=0)               # [d]
         return delta_hat, new_h, new_e, sum_hat, jnp.float32(0.0)
     # --- faulted wire: only sent (active) payloads can be corrupted --------
-    sent = active * delta_hat
+    payload = jax.vmap(c_up.encode)(up_keys, delta)        # leaves: [N, ...]
     if fc.bitflip_rate > 0.0:
-        sent = jnp.where(active > 0,
-                         faults.corrupt_f32(flt_key, sent, fc.bitflip_rate),
-                         sent)
+        payload = faults.corrupt_payload(flt_key, payload, fc.bitflip_rate,
+                                         only=active[:, 0])
     ok = active
     if fc.scrub:
-        # non-finite payload row => treat the worker as inactive this round
-        valid = faults.finite_mask(sent, axes=-1)          # [N,1]
-        ok = active * valid
-        sent = faults.nan_to_zero(sent) * valid
+        # failed checksum => treat the worker as inactive this round
+        valid = jax.vmap(c_up.validate)(payload)           # [N]
+        ok = active * valid[:, None]
+        payload = faults.scrub_payload(payload, valid)
+    sent = jax.vmap(c_up.decode)(payload)
+    sent = faults.nan_to_zero(sent) * ok if fc.scrub else sent * active
     if cfg.error_feedback:
         new_e = state.e + (grads - state.h) - sent
         new_e = ok * new_e + (1 - ok) * state.e
@@ -142,64 +161,74 @@ def _uplink_dense(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
     return sent, new_h, new_e, sum_hat, scrubbed
 
 
-def _uplink_pallas(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
-                   up_keys: jax.Array, active: jax.Array, alpha: float,
-                   fc: faults.FaultConfig, flt_key):
-    """Fused uplink: worker encode + memory update in one HBM pass
-    (kernels/fused_memory.py) and server dequant-accumulate (kernels/ring_sum).
+def _uplink_pallas(cfg: ArtemisConfig, c_up: wire.Codec, state: ArtemisState,
+                   grads: jax.Array, up_keys: jax.Array, active: jax.Array,
+                   alpha: float, fc: faults.FaultConfig, flt_key):
+    """Fused uplink for codecs of the ``squant_rows`` family: worker encode +
+    memory update in one HBM pass (kernels/fused_memory.py) and server
+    dequant-accumulate (kernels/ring_sum).
 
     Each worker row is one kernel block, so the per-block scale is the
     per-worker global L2 norm — identical semantics to ``squant`` on the
     dense path (same keys, same uniforms, same levels up to fp reassociation).
+    Error feedback folds in by encoding ``g + e - h`` instead of ``g - h``
+    (the EF buffer update happens outside the kernel).
     """
+    from repro.kernels import default_interpret
     from repro.kernels.fused_memory import fused_memory_update
     from repro.kernels.ring_sum import ring_sum
 
-    if cfg.error_feedback:
-        raise NotImplementedError("backend='pallas' does not support EF yet")
-    if cfg.up != "squant":
-        # tile_squant would need block=(1, tile) per-tile scales; only the
-        # global-norm operator matches the (1, d)-block layout used here
-        raise NotImplementedError(
-            f"backend='pallas' requires the global-norm 'squant' uplink, "
-            f"got {cfg.up!r}")
     n, d = cfg.n_workers, cfg.dim
     s = int(cfg.up_kwargs.get("s", 1))
+    itp = default_interpret()
+    g_in = grads + state.e if cfg.error_feedback else grads
     # same uniforms the dense compressor would draw under vmap
     u = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(up_keys)
     q, scales, h_fused = fused_memory_update(
-        grads, state.h, u, alpha, s=s, block=(1, d), interpret=True)
+        g_in, state.h, u, alpha, s=s, block=(1, d), interpret=itp)
     if not fc.wire_faults:
         # inactive workers neither transmit nor touch their memory
         new_h = active * h_fused + (1 - active) * state.h
+        if cfg.error_feedback:
+            delta_full = q.astype(grads.dtype) * scales     # unmasked decode
+            new_e = state.e + (grads - state.h) - delta_full
+            new_e = active * new_e + (1 - active) * state.e
+        else:
+            new_e = state.e
         act_scales = scales * active                        # [N,1]
         sum_hat = ring_sum(q[:, None, :], act_scales[:, :, None],
-                           block=(1, d), interpret=True).reshape(d)
+                           block=(1, d), interpret=itp).reshape(d)
         delta_hat = q.astype(grads.dtype) * act_scales      # [N,d] decoded
-        return delta_hat, new_h, state.e, sum_hat, jnp.float32(0.0)
-    # --- faulted wire: flip bits of the int8 levels + f32 scales -----------
+        return delta_hat, new_h, new_e, sum_hat, jnp.float32(0.0)
+    # --- faulted wire: the kernel's payload is a row_squant WirePayload ----
+    # (scale = norm/s; decode is q * scale), so the generic payload fault
+    # operators and validate apply unchanged
+    wc = wire.make_codec("row_squant", d, s=s)
+    payload = wire.WirePayload(
+        {"levels": q, "scales": scales},
+        wire.PayloadMeta("row_squant", (n, d), str(grads.dtype), (("s", s),)))
     if fc.bitflip_rate > 0.0:
-        kq, ks = jax.random.split(flt_key)
-        q = jnp.where(active > 0,
-                      faults.corrupt_int8(kq, q, fc.bitflip_rate), q)
-        scales = jnp.where(active > 0,
-                           faults.corrupt_f32(ks, scales, fc.bitflip_rate),
-                           scales)
+        payload = faults.corrupt_payload(flt_key, payload, fc.bitflip_rate,
+                                         only=active[:, 0])
     ok = active
     if fc.scrub:
-        # checksum proxy: levels within [-(s+1), s+1] and finite scale, else
-        # the payload is dropped via the same zero-scale path as inactivity
-        valid = faults.payload_valid(q, scales, s + 1, axes=-1)  # [N,1]
-        ok = active * valid
-        scales = faults.nan_to_zero(scales)
+        valid = jax.vmap(wc.validate)(payload)              # [N]
+        ok = active * valid[:, None]
+        payload = faults.scrub_payload(payload, valid)
+    q, scales = payload["levels"], payload["scales"]
     act_scales = scales * ok                                # [N,1]
     sum_hat = ring_sum(q[:, None, :], act_scales[:, :, None],
-                       block=(1, d), interpret=True).reshape(d)
+                       block=(1, d), interpret=itp).reshape(d)
     delta_hat = q.astype(grads.dtype) * act_scales          # [N,d] decoded
+    if cfg.error_feedback:
+        new_e = state.e + (grads - state.h) - delta_hat
+        new_e = ok * new_e + (1 - ok) * state.e
+    else:
+        new_e = state.e
     # worker memory tracks the accepted payload (see _uplink_dense)
     new_h = state.h + alpha * delta_hat
     scrubbed = jnp.sum(active) - jnp.sum(ok)
-    return delta_hat, new_h, state.e, sum_hat, scrubbed
+    return delta_hat, new_h, new_e, sum_hat, scrubbed
 
 
 def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
@@ -210,18 +239,21 @@ def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
     Args:
       grads:  [N, d] per-worker stochastic gradients g_{k+1}^i(w_k).
       active: optional {0,1} float mask [N]; default all-active.
-      backend: 'dense' (reference) or 'pallas' (fused uplink kernels);
-        default ``cfg.backend``.
+      backend: 'dense' (reference) or 'pallas' (fused uplink kernels for
+        codecs that declare the matching ``fused_uplink`` family; others
+        fall back to the dense path); default ``cfg.backend``.
 
     Returns:
       omega:  [d] the (doubly) compressed descent direction Omega_{k+1}.
       state':  updated ArtemisState.
       stats:  dict of bit costs and diagnostics for this round.
     """
-    c_up, c_dwn = cfg.compressors()
+    c_up, c_dwn = cfg.codecs()
     alpha = cfg.resolved_alpha()
     n, d = cfg.n_workers, cfg.dim
     backend = cfg.backend if backend is None else backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     if active is None:
         active = jnp.ones((n,), grads.dtype)
     active = active.astype(grads.dtype)[:, None]          # [N,1]
@@ -236,9 +268,10 @@ def artemis_round(cfg: ArtemisConfig, state: ArtemisState, grads: jax.Array,
                if fc.wire_faults else None)
 
     # ---- workers: compress gradient differences ---------------------------
-    uplink = {"dense": _uplink_dense, "pallas": _uplink_pallas}[backend]
+    use_fused = backend == "pallas" and c_up.fused_uplink == "squant_rows"
+    uplink = _uplink_pallas if use_fused else _uplink_dense
     delta_hat, new_h, new_e, sum_hat, scrubbed = uplink(
-        cfg, state, grads, up_keys, active, alpha, fc, flt_key)
+        cfg, c_up, state, grads, up_keys, active, alpha, fc, flt_key)
 
     # ---- server: reconstruct, aggregate, compress downlink ----------------
     if cfg.pp_mode == "pp2":

@@ -147,3 +147,16 @@ def bucket_keys(key: jax.Array, n_buckets: int) -> jax.Array:
     """
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(
         jnp.arange(n_buckets))
+
+
+def encode_buckets(codec, key: jax.Array, buckets: jax.Array):
+    """Encode a [B, R, C] bucket stack with any ``core/codec.py`` codec, one
+    PRNG key per bucket: returns a stacked ``WirePayload`` whose leaves all
+    carry a leading B axis (the unit the ring permutes)."""
+    keys = bucket_keys(key, buckets.shape[0])
+    return jax.vmap(codec.encode)(keys, buckets)
+
+
+def decode_buckets(codec, payload) -> jax.Array:
+    """Inverse of ``encode_buckets``: stacked payload -> [B, R, C] f32."""
+    return jax.vmap(codec.decode)(payload)

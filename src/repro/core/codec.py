@@ -1,0 +1,452 @@
+"""Unified two-sided wire codecs (DESIGN.md §9).
+
+Every compression operator in the repo is realized as a ``Codec``:
+
+    encode(key, x)  -> WirePayload     (the pytree that actually hits a wire)
+    decode(payload) -> x_hat           (the dequantized value, Assumption 5)
+
+with the round-trip ``decode(encode(key, x))`` REQUIRED to be bitwise
+identical to the legacy one-shot ``compress(key, x)`` for the operators that
+predate this layer (global-norm squant, tile_squant, sparsify; pinned by
+tests/test_codec.py).  The factoring that makes this possible for squant:
+IEEE-754 multiplication by ``sign(x) in {-1, 0, +1}`` is exact and commutes,
+so ``((sign * psi) * norm) / s == ((sign * norm) * psi) / s`` bit-for-bit —
+the int8 levels carry ``sign * psi`` and the scale carries the norm.
+
+One registry serves every layer:
+
+  * ``core/compression.py``  — simulator ``Compressor`` objects are thin
+                               round-trip wrappers over codecs;
+  * ``core/artemis.py``      — dense + Pallas uplinks and the downlink
+                               dispatch on codecs (``fused_uplink`` names the
+                               kernel family a codec can ride);
+  * ``core/dist.py``         — the bucketed/leaf mesh wires move
+                               ``WirePayload`` pytrees around the ring
+                               (``fused_acc`` marks payloads the fused
+                               ``kernels/bucket_ring`` dequant-accumulate
+                               understands);
+  * ``core/faults.py``       — bit-flips / scrubbing act on the payload
+                               representation uniformly (``validate`` is the
+                               server's checksum);
+  * ``launch/roofline.py``   — wire-byte models read ``wire_bytes(shape)``
+                               instead of re-deriving analytic formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP_BITS = 32  # uncompressed scalar width used by the paper's bit accounting
+
+
+# ---------------------------------------------------------------------------
+# WirePayload — the pytree that moves on a wire
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PayloadMeta:
+    """Static (trace-time) payload metadata: which codec produced it, the
+    original array shape/dtype to restore on decode, and the codec's static
+    parameters.  Hashable — it rides in the pytree aux_data."""
+    codec: str
+    shape: Tuple[int, ...]
+    dtype: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def param(self, name: str, default=None):
+        return dict(self.params).get(name, default)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WirePayload:
+    """A named bundle of wire arrays (levels/indices/scales/values...) plus
+    static metadata.  Registered as a pytree, so payloads vmap, scan, psum
+    and ``ppermute`` like any other value; leaves flatten in sorted-key
+    order (load-bearing: fault streams key off that order)."""
+    data: Dict[str, jax.Array]
+    meta: PayloadMeta
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.data[name]
+
+    def replace(self, **updates) -> "WirePayload":
+        return WirePayload({**self.data, **updates}, self.meta)
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.data))
+        return tuple(self.data[k] for k in keys), (keys, self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, meta = aux
+        return cls(data=dict(zip(keys, children)), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Codec — the two-sided operator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """A two-sided compression operator with known variance factor omega.
+
+    ``bits`` is the paper-side Elias-coded metering (Prop. S1 — what the
+    simulator charges); ``wire_bytes`` is the physical payload the mesh
+    backend actually ships, split by HLO dtype so roofline models and the
+    CI wire-format guard derive from the same source of truth.
+    """
+    name: str
+    omega: float                        # Assumption-5 variance factor
+    encode: Callable                    # (key, x) -> WirePayload
+    decode: Callable                    # (WirePayload) -> x_hat
+    bits: Callable                      # (n_elements,) -> float
+    wire_bytes: Callable                # (shape,) -> {hlo_dtype: bytes}
+    validate: Callable                  # (WirePayload) -> f32 scalar {0., 1.}
+    unbiased: bool = True
+    fused_uplink: Optional[str] = None  # kernel family for the fused
+                                        # [N, d] artemis uplink (or None)
+    fused_acc: bool = False             # kernels/bucket_ring understands
+                                        # this payload's dequant-accumulate
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Round-trip compress: decode(encode(key, x))."""
+        return self.decode(self.encode(key, x))
+
+    def wire_bytes_total(self, shape) -> float:
+        return float(sum(self.wire_bytes(shape).values()))
+
+
+def _nelems(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _finite_nonneg(x: jax.Array) -> jax.Array:
+    return jnp.all(jnp.isfinite(x) & (x >= 0))
+
+
+# ---------------------------------------------------------------------------
+# identity — omega = 0
+# ---------------------------------------------------------------------------
+
+def _identity_codec(d: int, **_) -> Codec:
+    def encode(key, x):
+        del key
+        meta = PayloadMeta("identity", tuple(x.shape), str(x.dtype))
+        return WirePayload({"values": x}, meta)
+
+    def decode(p):
+        return p["values"]
+
+    def validate(p):
+        return jnp.all(jnp.isfinite(p["values"])).astype(jnp.float32)
+
+    return Codec(
+        name="identity", omega=0.0, encode=encode, decode=decode,
+        bits=lambda n: FP_BITS * n,
+        wire_bytes=lambda shape: {"f32": 4 * _nelems(shape)},
+        validate=validate)
+
+
+# ---------------------------------------------------------------------------
+# s-quantization (paper Definition 1 / QSGD) — global-norm scale
+# ---------------------------------------------------------------------------
+
+def squant_omega(d: int, s: int) -> float:
+    """omega_C = min(d/s^2, sqrt(d)/s)  (Alistarh et al., App. A.1)."""
+    return min(d / s**2, math.sqrt(d) / s)
+
+
+def squant_bits(n: int, s: int) -> float:
+    """Elias-coded message size upper bound (Prop. S1)."""
+    t = s * (s + math.sqrt(n))
+    return (3.0 + 1.5 * math.log(2.0 * (s**2 + n) / t)) * t + FP_BITS
+
+
+def _squant_levels(key, x, s):
+    """Stochastic level rounding shared by the squant family: int8 levels
+    ``sign(x) * psi`` for rows normalized by ``norm`` (same uniforms, same
+    comparisons as the legacy one-shot operators)."""
+    norm = jnp.linalg.norm(x)
+    r = jnp.where(norm > 0, jnp.abs(x) / norm * s, jnp.zeros_like(x))
+    low = jnp.floor(r)
+    u = jax.random.uniform(key, x.shape)
+    psi = low + (u < (r - low)).astype(x.dtype)
+    return (jnp.sign(x) * psi).astype(jnp.int8), norm
+
+
+def _squant_codec(d: int, s: int = 1, **_) -> Codec:
+    s = int(s)
+    if not 1 <= s <= 126:
+        raise ValueError(f"squant levels s={s} must fit int8: 1 <= s <= 126")
+
+    def encode(key, x):
+        flat = x.reshape(-1)
+        q, norm = _squant_levels(key, flat, s)
+        meta = PayloadMeta("squant", tuple(x.shape), str(x.dtype),
+                           (("s", s),))
+        # the scale is the UNdivided norm: decode does (q * norm) / s, which
+        # is bitwise the legacy sign*norm*psi/s (sign flips commute exactly)
+        return WirePayload({"levels": q, "scales": norm}, meta)
+
+    def decode(p):
+        dt = jnp.dtype(p.meta.dtype)
+        out = p["levels"].astype(dt) * p["scales"].astype(dt) / s
+        return out.reshape(p.meta.shape).astype(dt)
+
+    def validate(p):
+        okq = jnp.all(jnp.abs(p["levels"].astype(jnp.int32)) <= s + 1)
+        return (okq & _finite_nonneg(p["scales"])).astype(jnp.float32)
+
+    return Codec(
+        name=f"squant(s={s})", omega=squant_omega(d, s),
+        encode=encode, decode=decode,
+        bits=lambda n, s=s: squant_bits(n, s),
+        wire_bytes=lambda shape: {"s8": _nelems(shape), "f32": 4},
+        validate=validate, fused_uplink="squant_rows")
+
+
+# ---------------------------------------------------------------------------
+# per-tile s-quantization (TPU-native adaptation; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def _tile_squant_codec(d: int, s: int = 1, tile: int = 1024, **_) -> Codec:
+    s, tile = int(s), int(tile)
+    if not 1 <= s <= 126:
+        raise ValueError(f"tile_squant levels s={s} must fit int8")
+
+    def encode(key, x):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        pad = (-n) % tile
+        padded = jnp.pad(flat, (0, pad))
+        tiles = padded.reshape(-1, tile)
+        norms = jnp.linalg.norm(tiles, axis=1, keepdims=True)
+        r = jnp.where(norms > 0, jnp.abs(tiles) / norms * s,
+                      jnp.zeros_like(tiles))
+        low = jnp.floor(r)
+        u = jax.random.uniform(key, tiles.shape)
+        psi = low + (u < (r - low)).astype(tiles.dtype)
+        q = (jnp.sign(tiles) * psi).astype(jnp.int8)
+        meta = PayloadMeta("tile_squant", tuple(x.shape), str(x.dtype),
+                           (("s", s), ("tile", tile)))
+        return WirePayload({"levels": q, "scales": norms}, meta)
+
+    def decode(p):
+        dt = jnp.dtype(p.meta.dtype)
+        out = p["levels"].astype(dt) * p["scales"].astype(dt) / s
+        n = _nelems(p.meta.shape)
+        return out.reshape(-1)[:n].reshape(p.meta.shape).astype(dt)
+
+    def validate(p):
+        okq = jnp.all(jnp.abs(p["levels"].astype(jnp.int32)) <= s + 1)
+        return (okq & _finite_nonneg(p["scales"])).astype(jnp.float32)
+
+    def wire_bytes(shape, tile=tile):
+        n = _nelems(shape)
+        t = -(-n // tile)
+        return {"s8": t * tile, "f32": 4 * t}
+
+    return Codec(
+        name=f"tile_squant(s={s},t={tile})", omega=squant_omega(tile, s),
+        encode=encode, decode=decode,
+        bits=lambda n, s=s, tile=tile: math.ceil(n / tile)
+        * squant_bits(min(n, tile), s),
+        wire_bytes=wire_bytes, validate=validate)
+
+
+# ---------------------------------------------------------------------------
+# row s-quantization — the mesh wire format (core/dist.py, kernels/*)
+# ---------------------------------------------------------------------------
+
+def row_squant_encode(key: jax.Array, x: jax.Array, s: int):
+    """Per-row (last axis) stochastic s-quantization -> (levels int8,
+    scales f32 = norm/s, keepdims).  Row-wise scales keep every op
+    elementwise or a last-axis reduction, so GSPMD shards it without data
+    movement beyond a tiny partial-norm reduce.  This IS the wire format of
+    ``kernels/squant.py`` / ``kernels/fused_memory.py`` (decode is
+    ``q * scale``, the division by s is folded into the scale)."""
+    xf = x.astype(jnp.float32)
+    if xf.ndim == 0:
+        norm = jnp.abs(xf)
+    else:
+        norm = jnp.sqrt(jnp.sum(jnp.square(xf), axis=-1, keepdims=True))
+    # an all-NaN/Inf row must not ship a NaN scale: clamp to 0 so decode is
+    # exactly 0 (finite) whatever the levels hold (matches kernels/squant.py)
+    scale = jnp.where(jnp.isfinite(norm), norm / s, 0.0)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    r = jnp.abs(xf) / safe * s
+    low = jnp.floor(r)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    psi = low + (u < (r - low)).astype(jnp.float32)
+    q = (jnp.sign(xf) * psi).astype(jnp.int8)
+    return q, scale
+
+
+def row_squant_decode(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _row_squant_codec(d: int, s: int = 1, **_) -> Codec:
+    s = int(s)
+    if not 1 <= s <= 126:
+        raise ValueError(f"row_squant levels s={s} must fit int8")
+
+    def encode(key, x):
+        q, scale = row_squant_encode(key, x, s)
+        meta = PayloadMeta("row_squant", tuple(x.shape), str(x.dtype),
+                           (("s", s),))
+        return WirePayload({"levels": q, "scales": scale}, meta)
+
+    def decode(p):
+        return row_squant_decode(p["levels"], p["scales"],
+                                 jnp.dtype(p.meta.dtype))
+
+    def validate(p):
+        okq = jnp.all(jnp.abs(p["levels"].astype(jnp.int32)) <= s + 1)
+        return (okq & _finite_nonneg(p["scales"])).astype(jnp.float32)
+
+    def wire_bytes(shape):
+        n = _nelems(shape)
+        rows = _nelems(shape[:-1]) if len(shape) else 1
+        return {"s8": n, "f32": 4 * rows}
+
+    return Codec(
+        name=f"row_squant(s={s})", omega=squant_omega(max(d, 1), s),
+        encode=encode, decode=decode,
+        bits=lambda n, s=s, d=max(d, 1): math.ceil(n / d)
+        * squant_bits(min(n, d), s),
+        wire_bytes=wire_bytes, validate=validate,
+        fused_uplink="squant_rows", fused_acc=True)
+
+
+# ---------------------------------------------------------------------------
+# stochastic sparsification (Wen et al. 2017) — index+value payload
+# ---------------------------------------------------------------------------
+
+def _sparsify_codec(d: int, q: float = 0.25, **_) -> Codec:
+    q = float(q)
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sparsify keep-probability q={q} not in (0, 1]")
+
+    def encode(key, x):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        mask = jax.random.bernoulli(key, q, x.shape).reshape(-1)
+        # stable survivor-first ordering: indices of kept coords ascending,
+        # dropped slots filled with the out-of-range sentinel n (decode
+        # scatters with mode="drop", so sentinels vanish)
+        order = jnp.argsort(~mask, stable=True)
+        kept = mask[order]
+        idx = jnp.where(kept, order, n).astype(jnp.int32)
+        vals = jnp.where(kept, flat[order] / q, 0.0).astype(flat.dtype)
+        meta = PayloadMeta("sparsify", tuple(x.shape), str(x.dtype),
+                           (("q", q),))
+        return WirePayload({"indices": idx, "values": vals}, meta)
+
+    def decode(p):
+        n = _nelems(p.meta.shape)
+        dt = jnp.dtype(p.meta.dtype)
+        flat = jnp.zeros((n,), dt).at[p["indices"]].set(
+            p["values"].astype(dt), mode="drop")
+        return flat.reshape(p.meta.shape)
+
+    def validate(p):
+        n = _nelems(p.meta.shape)
+        oki = jnp.all((p["indices"] >= 0) & (p["indices"] <= n))
+        return (oki & jnp.all(jnp.isfinite(p["values"]))).astype(jnp.float32)
+
+    def wire_bytes(shape):
+        # fixed-capacity payload: n index slots (s32) + n value slots (f32)
+        n = _nelems(shape)
+        return {"s32": 4 * n, "f32": 4 * n}
+
+    return Codec(
+        name=f"sparsify(q={q})", omega=1.0 / q - 1.0,
+        encode=encode, decode=decode,
+        bits=lambda n, q=q: q * n * (FP_BITS + max(1.0, math.log2(max(n, 2)))),
+        wire_bytes=wire_bytes, validate=validate)
+
+
+# ---------------------------------------------------------------------------
+# top-k (biased contrast baseline; violates Assumption 5 unbiasedness)
+# ---------------------------------------------------------------------------
+
+def _topk_codec(d: int, frac: float = 0.1, **_) -> Codec:
+    frac = float(frac)
+
+    def encode(key, x):
+        del key
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        k = max(1, int(n * frac))
+        # exact k coordinates even on tied magnitudes — the old
+        # sort-threshold + >= kept every tied coord, so the bit accounting
+        # undercharged the message actually sent
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        meta = PayloadMeta("topk", tuple(x.shape), str(x.dtype),
+                           (("frac", frac), ("k", k)))
+        return WirePayload({"indices": idx.astype(jnp.int32), "values": vals},
+                           meta)
+
+    def decode(p):
+        n = _nelems(p.meta.shape)
+        dt = jnp.dtype(p.meta.dtype)
+        flat = jnp.zeros((n,), dt).at[p["indices"]].set(
+            p["values"].astype(dt), mode="drop")
+        return flat.reshape(p.meta.shape)
+
+    def validate(p):
+        n = _nelems(p.meta.shape)
+        oki = jnp.all((p["indices"] >= 0) & (p["indices"] < n))
+        return (oki & jnp.all(jnp.isfinite(p["values"]))).astype(jnp.float32)
+
+    def wire_bytes(shape, frac=frac):
+        n = _nelems(shape)
+        k = max(1, int(n * frac))
+        return {"s32": 4 * k, "f32": 4 * k}
+
+    return Codec(
+        name=f"topk({frac})", omega=1.0 - frac,
+        encode=encode, decode=decode,
+        bits=lambda n, frac=frac: max(1, int(n * frac))
+        * (FP_BITS + max(1.0, math.log2(max(n, 2)))),
+        wire_bytes=wire_bytes, validate=validate, unbiased=False)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Codec]] = {
+    "identity": _identity_codec,
+    "none": _identity_codec,
+    "squant": _squant_codec,
+    "tile_squant": _tile_squant_codec,
+    "row_squant": _row_squant_codec,
+    "sparsify": _sparsify_codec,
+    "topk": _topk_codec,
+}
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_codec(name: str, d: int, **kwargs) -> Codec:
+    """Build a registered codec for messages of flattened dimension ``d``
+    (``d`` fixes omega; encode adapts to whatever shape it is handed).
+    Unknown static kwargs are ignored, matching the legacy compressor
+    factories (variant tables pass a shared kwargs dict)."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown codec {name!r}; choose from {sorted(_REGISTRY)}")
+    return _REGISTRY[name](d, **kwargs)

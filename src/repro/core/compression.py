@@ -2,24 +2,30 @@
 
 Every operator C satisfies  E[C(x)] = x  and  E||C(x) - x||^2 <= omega * ||x||^2.
 
-Operators are *functional*: ``compress(key, x) -> x_hat`` where ``x_hat`` is the
-dequantized (decoded) value.  The wire format / bit cost is exposed separately
-via ``bits(shape)`` so the federated simulator can meter communication using
-the Elias-code bound of Prop. S1 without actually entropy-coding.
+Since the codec refactor (DESIGN.md §9) the operators themselves live in
+``core/codec.py`` as two-sided encode/decode pairs; this module keeps the
+simulator-facing ``Compressor`` view: ``compress(key, x) -> x_hat`` is the
+codec round-trip ``decode(encode(key, x))`` — bitwise identical to the
+pre-codec one-shot operators (pinned by tests/test_codec.py).  The wire
+format / bit cost is exposed separately via ``bits(shape)`` so the federated
+simulator can meter communication using the Elias-code bound of Prop. S1
+without actually entropy-coding.
 
 The vector is treated as flat; callers may pass any-shaped arrays.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-FP_BITS = 32  # uncompressed scalar width used by the paper's bit accounting
+from repro.core import codec as wire
+
+# re-exported: the bit-accounting constants/formulas now live with the codecs
+FP_BITS = wire.FP_BITS
+squant_omega = wire.squant_omega
+squant_bits = wire.squant_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,142 +42,36 @@ class Compressor:
         return self.compress(key, x)
 
 
-# ---------------------------------------------------------------------------
-# Identity (no compression) — omega = 0
-# ---------------------------------------------------------------------------
+def from_codec(c: wire.Codec) -> Compressor:
+    """The simulator view of a codec: compress == decode(encode(.))."""
+    return Compressor(name=c.name, omega=c.omega, compress=c.__call__,
+                      bits=c.bits, unbiased=c.unbiased)
+
 
 def identity() -> Compressor:
-    return Compressor(
-        name="identity",
-        omega=0.0,
-        compress=lambda key, x: x,
-        bits=lambda n: FP_BITS * n,
-    )
-
-
-# ---------------------------------------------------------------------------
-# s-quantization (paper Definition 1 / QSGD, Alistarh et al. 2017)
-# ---------------------------------------------------------------------------
-
-def _squant(key: jax.Array, x: jax.Array, s: int) -> jax.Array:
-    """C_s(x) = sign(x) * ||x||_2 * psi / s, with stochastic level rounding."""
-    flat = x.reshape(-1)
-    norm = jnp.linalg.norm(flat)
-    # r in [0, s]: |x_j| / ||x|| * s
-    r = jnp.where(norm > 0, jnp.abs(flat) / norm * s, jnp.zeros_like(flat))
-    low = jnp.floor(r)
-    prob_up = r - low
-    u = jax.random.uniform(key, flat.shape)
-    psi = low + (u < prob_up).astype(flat.dtype)
-    out = jnp.sign(flat) * norm * psi / s
-    return out.reshape(x.shape).astype(x.dtype)
-
-
-def squant_omega(d: int, s: int) -> float:
-    """omega_C = min(d/s^2, sqrt(d)/s)  (Alistarh et al., App. A.1)."""
-    return min(d / s**2, math.sqrt(d) / s)
-
-
-def squant_bits(n: int, s: int) -> float:
-    """Elias-coded message size upper bound (Prop. S1)."""
-    t = s * (s + math.sqrt(n))
-    return (3.0 + 1.5 * math.log(2.0 * (s**2 + n) / t)) * t + FP_BITS
+    return from_codec(wire.make_codec("identity", 1))
 
 
 def squant(d: int, s: int = 1) -> Compressor:
     """Global-norm s-quantization; ``d`` is the flattened message dimension."""
-    return Compressor(
-        name=f"squant(s={s})",
-        omega=squant_omega(d, s),
-        compress=partial(_squant, s=s),
-        bits=lambda n, s=s: squant_bits(n, s),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Per-tile s-quantization (TPU-native adaptation; see DESIGN.md §3)
-# ---------------------------------------------------------------------------
-
-def _tile_squant(key: jax.Array, x: jax.Array, s: int, tile: int) -> jax.Array:
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    pad = (-n) % tile
-    padded = jnp.pad(flat, (0, pad))
-    tiles = padded.reshape(-1, tile)
-    norms = jnp.linalg.norm(tiles, axis=1, keepdims=True)
-    r = jnp.where(norms > 0, jnp.abs(tiles) / norms * s, jnp.zeros_like(tiles))
-    low = jnp.floor(r)
-    u = jax.random.uniform(key, tiles.shape)
-    psi = low + (u < (r - low)).astype(tiles.dtype)
-    out = jnp.sign(tiles) * norms * psi / s
-    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+    return from_codec(wire.make_codec("squant", d, s=s))
 
 
 def tile_squant(tile: int = 1024, s: int = 1) -> Compressor:
     """s-quantization with per-tile scales. omega is that of a ``tile``-dim
     message (each tile is an independent s-quantization)."""
-    return Compressor(
-        name=f"tile_squant(s={s},t={tile})",
-        omega=squant_omega(tile, s),
-        compress=partial(_tile_squant, s=s, tile=tile),
-        # ceil(n/tile) independent messages of dimension <= tile
-        bits=lambda n, s=s, tile=tile: math.ceil(n / tile) * squant_bits(min(n, tile), s),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Stochastic sparsification (Wen et al. 2017; used in Theorem 3)
-# ---------------------------------------------------------------------------
-
-def _sparsify(key: jax.Array, x: jax.Array, q: float) -> jax.Array:
-    mask = jax.random.bernoulli(key, q, x.shape)
-    return jnp.where(mask, x / q, 0.0).astype(x.dtype)
+    return from_codec(wire.make_codec("tile_squant", tile, s=s, tile=tile))
 
 
 def sparsify(q: float) -> Compressor:
     """Keep each coordinate w.p. q, rescale by 1/q. omega = 1/q - 1 (Lemma S15)."""
-    return Compressor(
-        name=f"sparsify(q={q})",
-        omega=1.0 / q - 1.0,
-        compress=partial(_sparsify, q=q),
-        # indices (log2 n each) + values for ~qn survivors
-        bits=lambda n, q=q: q * n * (FP_BITS + max(1.0, math.log2(max(n, 2)))),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Top-k (biased — contrast baseline; violates Assumption 5 unbiasedness)
-# ---------------------------------------------------------------------------
-
-def _topk(key: jax.Array, x: jax.Array, frac: float) -> jax.Array:
-    del key
-    flat = x.reshape(-1)
-    k = max(1, int(flat.shape[0] * frac))
-    thresh = jnp.sort(jnp.abs(flat))[-k]
-    return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(x.shape)
+    return from_codec(wire.make_codec("sparsify", 1, q=q))
 
 
 def topk(frac: float) -> Compressor:
-    return Compressor(
-        name=f"topk({frac})",
-        omega=1.0 - frac,   # contraction factor view; biased!
-        compress=partial(_topk, frac=frac),
-        bits=lambda n, frac=frac: frac * n * (FP_BITS + max(1.0, math.log2(max(n, 2)))),
-        unbiased=False,
-    )
-
-
-_REGISTRY = {
-    "identity": lambda d, **kw: identity(),
-    "none": lambda d, **kw: identity(),
-    "squant": lambda d, s=1, **kw: squant(d, s),
-    "tile_squant": lambda d, s=1, tile=1024, **kw: tile_squant(tile, s),
-    "sparsify": lambda d, q=0.25, **kw: sparsify(q),
-    "topk": lambda d, frac=0.1, **kw: topk(frac),
-}
+    """Exact top-k by |x| (jax.lax.top_k — ties no longer over-send)."""
+    return from_codec(wire.make_codec("topk", 1, frac=frac))
 
 
 def make_compressor(name: str, d: int, **kwargs) -> Compressor:
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown compressor {name!r}; choose from {sorted(_REGISTRY)}")
-    return _REGISTRY[name](d, **kwargs)
+    return from_codec(wire.make_codec(name, d, **kwargs))

@@ -46,8 +46,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bucketing
+from repro.core import codec as wire
 from repro.core import faults as FLT
 from repro.kernels import bucket_ring as BK
+from repro.kernels import default_interpret
 
 PyTree = Any
 
@@ -111,6 +113,10 @@ class DistConfig:
     bucket_row: int = bucketing.DEFAULT_ROW      # per-row-scale tile C
     reduce_impl: str = "pipelined"  # "pipelined" scan ring | "sequential"
                                     # unrolled hops | "psum" dense reference
+    # --- wire codec (core/codec.py registry; DESIGN.md §9) ---
+    codec: str = "squant"           # "squant" = the native row-scale wire
+                                    # format; any registered codec works
+    codec_kwargs: Tuple[Tuple[str, Any], ...] = ()
     # --- fault injection + server defenses (core/faults.py, DESIGN.md §8) ---
     faults: Optional[FLT.FaultConfig] = None
 
@@ -120,6 +126,10 @@ class DistConfig:
         if self.reduce_impl not in REDUCE_IMPLS:
             raise ValueError(
                 f"reduce_impl={self.reduce_impl!r} not in {REDUCE_IMPLS}")
+        name = {"squant": "row_squant"}.get(self.codec, self.codec)
+        if name not in wire.available():
+            raise ValueError(
+                f"codec={self.codec!r} not in {wire.available()}")
 
     @property
     def up_compress(self) -> bool:
@@ -146,44 +156,30 @@ class DistConfig:
                                      max_buckets=self.max_buckets,
                                      row=self.bucket_row)
 
+    def wire_codec(self, row: int) -> wire.Codec:
+        """The codec that runs on this wire for messages with last-axis
+        length ``row`` (which fixes omega).  ``codec="squant"`` maps to the
+        native per-row-scale mesh format ``row_squant``."""
+        name = {"squant": "row_squant"}.get(self.codec, self.codec)
+        kw = dict(self.codec_kwargs)
+        if name == "row_squant":
+            kw.setdefault("s", self.s)
+        return wire.make_codec(name, row, **kw)
+
 
 # ---------------------------------------------------------------------------
 # distributed-friendly per-row s-quantization (sharding-transparent)
 # ---------------------------------------------------------------------------
 
-def _row_norms(x: jax.Array) -> jax.Array:
-    if x.ndim == 0:
-        return jnp.abs(x)
-    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1,
-                            keepdims=True))
-
-
-def squant_encode(key: jax.Array, x: jax.Array, s: int):
-    """Per-row stochastic s-quantization -> (levels int8, scales f32).
-
-    Row-wise scales keep every op elementwise or a last-axis reduction, so
-    GSPMD shards it without data movement beyond a tiny partial-norm reduce.
-    """
-    xf = x.astype(jnp.float32)
-    norm = _row_norms(xf)
-    # an all-NaN/Inf row must not ship a NaN scale: clamp to 0 so decode is
-    # exactly 0 (finite) whatever the levels hold (matches kernels/squant.py)
-    scale = jnp.where(jnp.isfinite(norm), norm / s, 0.0)
-    safe = jnp.where(norm > 0, norm, 1.0)
-    r = jnp.abs(xf) / safe * s
-    low = jnp.floor(r)
-    u = jax.random.uniform(key, x.shape, jnp.float32)
-    psi = low + (u < (r - low)).astype(jnp.float32)
-    q = (jnp.sign(xf) * psi).astype(jnp.int8)
-    return q, scale
-
-
-def squant_decode(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+# The row-scale wire format now lives in core/codec.py ("row_squant") so the
+# kernels, the mesh wires, and the simulator share one definition; these
+# aliases keep the historical dist-level entry points.
+squant_encode = wire.row_squant_encode
+squant_decode = wire.row_squant_decode
 
 
 def _omega_row(row_len: int, s: int) -> float:
-    return min(row_len / s**2, float(np.sqrt(row_len)) / s)
+    return wire.squant_omega(row_len, s)
 
 
 def default_alpha(params: PyTree, s: int) -> float:
@@ -197,60 +193,87 @@ def default_alpha_bucketed(row: int, s: int) -> float:
     return float(1.0 / (2.0 * (_omega_row(row, s) + 1.0)))
 
 
+def _codec_alpha(cfg: "DistConfig", rows) -> float:
+    """Thm 1 alpha from the wire codec's omega (max over message rows).
+    For the native squant wire this equals ``default_alpha*`` bit-for-bit
+    (same doubles through the same formula)."""
+    om = max(cfg.wire_codec(int(r)).omega for r in rows)
+    return float(1.0 / (2.0 * (om + 1.0)))
+
+
 # ---------------------------------------------------------------------------
 # bucketed ring transports (run INSIDE the worker-manual shard_map)
 # ---------------------------------------------------------------------------
 
 def bucket_encode(key: jax.Array, buckets: jax.Array, s: int):
     """Per-bucket squant encode: [B, R, C] -> (q int8 [B,R,C], scales
-    [B,R,1] f32), one PRNG key per bucket (``bucketing.bucket_keys``)."""
+    [B,R,1] f32), one PRNG key per bucket (``bucketing.bucket_keys``).
+    Kept for benchmarks/tests; the aggregate now goes through
+    ``bucketing.encode_buckets`` with an arbitrary codec."""
     keys = bucketing.bucket_keys(key, buckets.shape[0])
     return jax.vmap(lambda k, x: squant_encode(k, x, s))(keys, buckets)
 
 
-def bucket_ring_reduce(q: jax.Array, scales: jax.Array,
+def payload_decode(codec: wire.Codec, payload: wire.WirePayload) -> jax.Array:
+    """Decode a bucket-stacked payload (leaves carry a leading B axis)."""
+    return jax.vmap(codec.decode)(payload)
+
+
+def _payload_acc(codec: wire.Codec, acc: jax.Array,
+                 payload: wire.WirePayload, interpret: bool) -> jax.Array:
+    """One dequant-accumulate: the native row-scale payload rides the fused
+    kernels/bucket_ring path; any other codec decodes then adds."""
+    if codec.fused_acc:
+        return BK.bucket_acc(acc, payload["levels"], payload["scales"],
+                             interpret=interpret)
+    return acc + payload_decode(codec, payload)
+
+
+def bucket_ring_reduce(codec: wire.Codec, payload: wire.WirePayload,
                        axes: Tuple[str, ...], n: int, *,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """Pipelined double-buffered ring all-reduce of compressed payloads.
 
-    ``lax.scan`` over the N-1 hops; the carry holds the in-flight payload.
+    ``lax.scan`` over the N-1 hops; the carry holds the in-flight payload
+    (a codec ``WirePayload`` pytree — every leaf gets its own ``ppermute``).
     Each hop issues the next ``ppermute`` *and* dequant-accumulates the
-    payload it currently holds (``kernels/bucket_ring.bucket_acc``) — the
-    two are data-independent inside the step, so the compiler overlaps the
-    collective with the compute (comm hides under dequant or vice versa).
-    Accumulation order (own payload first, then arrivals from w-1, w-2, ...)
-    matches the sequential transport bit-for-bit.
+    payload it currently holds — the two are data-independent inside the
+    step, so the compiler overlaps the collective with the compute (comm
+    hides under dequant or vice versa).  Accumulation order (own payload
+    first, then arrivals from w-1, w-2, ...) matches the sequential
+    transport bit-for-bit.
     """
-    acc = jnp.zeros(q.shape, jnp.float32)
+    itp = default_interpret() if interpret is None else interpret
+    acc = jnp.zeros(jax.eval_shape(lambda p: payload_decode(codec, p),
+                                   payload).shape, jnp.float32)
     if n == 1:
-        return BK.bucket_acc(acc, q, scales, interpret=interpret)
+        return _payload_acc(codec, acc, payload, itp)
     perm = [(j, (j + 1) % n) for j in range(n)]
 
     def hop(carry, _):
-        qc, sc, a = carry
-        qn = jax.lax.ppermute(qc, axes, perm)
-        sn = jax.lax.ppermute(sc, axes, perm)
-        a = BK.bucket_acc(a, qc, sc, interpret=interpret)
-        return (qn, sn, a), None
+        pc, a = carry
+        pn = jax.tree.map(lambda l: jax.lax.ppermute(l, axes, perm), pc)
+        a = _payload_acc(codec, a, pc, itp)
+        return (pn, a), None
 
-    (ql, sl, acc), _ = jax.lax.scan(hop, (q, scales, acc), None, length=n - 1)
-    return BK.bucket_acc(acc, ql, sl, interpret=interpret)
+    (pl, acc), _ = jax.lax.scan(hop, (payload, acc), None, length=n - 1)
+    return _payload_acc(codec, acc, pl, itp)
 
 
-def bucket_ring_reduce_sequential(q: jax.Array, scales: jax.Array,
+def bucket_ring_reduce_sequential(codec: wire.Codec,
+                                  payload: wire.WirePayload,
                                   axes: Tuple[str, ...], n: int) -> jax.Array:
     """The pre-bucketing transport applied to the bucket payload: N-1
     *blocking* hops with a dequant-accumulate stall between each (the
     per-leaf ring of ``wire="leaf"``, kept as the pipelining baseline)."""
-    acc = squant_decode(q, scales)
+    acc = payload_decode(codec, payload)
     if n == 1:
         return acc
     perm = [(j, (j + 1) % n) for j in range(n)]
-    qr, sr = q, scales
+    pr = payload
     for _ in range(n - 1):
-        qr = jax.lax.ppermute(qr, axes, perm)
-        sr = jax.lax.ppermute(sr, axes, perm)
-        acc = acc + squant_decode(qr, sr)
+        pr = jax.tree.map(lambda l: jax.lax.ppermute(l, axes, perm), pr)
+        acc = acc + payload_decode(codec, pr)
     return acc
 
 
@@ -356,10 +379,11 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
     axes = cfg.worker_axes
     n = n_workers
     fc = FLT.of(cfg.faults)
+    wc = cfg.wire_codec(layout.row)
     up_key, dwn_key, active, part, flt_key = _round_keys(
         cfg, state.step, wid, state.prev_active[0])
     alpha = cfg.alpha if cfg.alpha is not None else (
-        default_alpha_bucketed(layout.row, cfg.s) if cfg.memory else 0.0)
+        _codec_alpha(cfg, [layout.row]) if cfg.memory else 0.0)
     p = cfg.p_participation
     mdt = jnp.dtype(cfg.memory_dtype)
 
@@ -382,31 +406,28 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
 
     ok = active
     if cfg.up_compress:
-        q, scale = bucket_encode(up_key, delta, cfg.s)
+        enc = bucketing.encode_buckets(wc, up_key, delta)
         # PP2: an inactive worker's payload (its EF buffer under Dore) must
-        # contribute EXACTLY zero to the sum — zero the wire scales.
-        scale = scale * active
+        # contribute EXACTLY zero to the sum — zero the wire float leaves
+        # (the scales for squant, the values for sparsify).
+        enc = FLT.mask_payload(enc, active)
         if fc.bitflip_rate > 0.0:
             # only a payload actually on the wire can pick up flipped bits
-            kq, ks = jax.random.split(jax.random.fold_in(flt_key, 3))
-            q = jnp.where(active > 0,
-                          FLT.corrupt_int8(kq, q, fc.bitflip_rate), q)
-            scale = jnp.where(active > 0,
-                              FLT.corrupt_f32(ks, scale, fc.bitflip_rate),
-                              scale)
+            enc = FLT.corrupt_payload(jax.random.fold_in(flt_key, 3), enc,
+                                      fc.bitflip_rate, only=active)
         if fc.scrub:
             # per-BUCKET checksum: a corrupt bucket is dropped through the
             # same zero-scale path as inactivity; its h/e slices stay put
-            valid = FLT.payload_valid(q, scale, cfg.s + 1, axes=(1, 2))
-            ok = active * valid                        # [B,1,1] broadcast
-            scale = FLT.nan_to_zero(scale) * valid
+            valid = jax.vmap(wc.validate)(enc)         # [B]
+            ok = active * valid.reshape(-1, 1, 1)      # [B,1,1] broadcast
+            enc = FLT.scrub_payload(enc, valid)
         if cfg.reduce_impl == "psum":
-            dhat_sum = jax.lax.psum(squant_decode(q, scale), axes)
+            dhat_sum = jax.lax.psum(payload_decode(wc, enc), axes)
         elif cfg.reduce_impl == "sequential":
-            dhat_sum = bucket_ring_reduce_sequential(q, scale, axes, n)
+            dhat_sum = bucket_ring_reduce_sequential(wc, enc, axes, n)
         else:
-            dhat_sum = bucket_ring_reduce(q, scale, axes, n)
-        dhat_i = squant_decode(q, scale)
+            dhat_sum = bucket_ring_reduce(wc, enc, axes, n)
+        dhat_i = payload_decode(wc, enc)
     else:
         dhat_i = delta * active
         dhat_sum = jax.lax.psum(dhat_i, axes)
@@ -425,8 +446,7 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
         h_new, hbar_new = state.h, state.hbar
     if cfg.dwn_compress:
         # zero-byte broadcast: identical key -> identical compression
-        qd, sd = bucket_encode(dwn_key, ghat, cfg.s)
-        ghat = squant_decode(qd, sd)
+        ghat = payload_decode(wc, bucketing.encode_buckets(wc, dwn_key, ghat))
 
     new_state = ArtemisDistState(h_new, hbar_new, e_new, state.acc,
                                  jnp.reshape(part, (1,)), state.step + 1)
@@ -452,8 +472,10 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
     if fc.blowup_rate > 0.0:
         blow_hit = jax.random.bernoulli(jax.random.fold_in(flt_key, 2),
                                         fc.blowup_rate, ())
+    leaf_rows = [int(l.shape[-1]) if l.ndim else 1
+                 for l in jax.tree.leaves(grads)]
     alpha = cfg.alpha if cfg.alpha is not None else (
-        default_alpha(grads, cfg.s) if cfg.memory else 0.0)
+        _codec_alpha(cfg, leaf_rows) if cfg.memory else 0.0)
 
     leaves, treedef = jax.tree.flatten(grads)
     h_l = treedef.flatten_up_to(state.h)
@@ -498,37 +520,39 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
             delta = delta + e_buf
         ok_l = act_l
         if cfg.up_compress:
-            q, scale = squant_encode(jax.random.fold_in(up_key, i), delta, cfg.s)
+            wcl = cfg.wire_codec(int(g.shape[-1]) if g.ndim else 1)
+            p_l = wcl.encode(jax.random.fold_in(up_key, i), delta)
             # PP2: an inactive worker's payload (its EF buffer under Dore)
-            # must contribute EXACTLY zero to the ring sum — zero the scales.
-            scale = scale * act_l
+            # must contribute EXACTLY zero to the ring sum — zero the wire
+            # float leaves (the scales for squant).
+            p_l = FLT.mask_payload(p_l, act_l)
             if fc.bitflip_rate > 0.0:
-                kq, ks = jax.random.split(jax.random.fold_in(flt_key, 10 + i))
-                q = jnp.where(act_l > 0,
-                              FLT.corrupt_int8(kq, q, fc.bitflip_rate), q)
-                scale = jnp.where(act_l > 0,
-                                  FLT.corrupt_f32(ks, scale, fc.bitflip_rate),
-                                  scale)
+                p_l = FLT.corrupt_payload(jax.random.fold_in(flt_key, 10 + i),
+                                          p_l, fc.bitflip_rate, only=act_l)
             if fc.scrub:
                 # per-LEAF checksum -> dropped via the zero-scale path
-                valid = FLT.payload_valid(q, scale, cfg.s + 1, axes=None)
+                valid = wcl.validate(p_l)
                 ok_l = act_l * valid
-                scale = FLT.nan_to_zero(scale) * valid
-            q = _pin(q, spec_l[i])
-            scale = _pin_rows(scale, spec_l[i])
+                p_l = FLT.scrub_payload(p_l, valid)
+            if "levels" in p_l.data:
+                # levels keep the leaf's auto-axis sharding; scales have the
+                # last dim collapsed (other codecs ship 1-D index/value
+                # payloads the leaf specs don't apply to)
+                p_l = p_l.replace(levels=_pin(p_l["levels"], spec_l[i]),
+                                  scales=_pin_rows(p_l["scales"], spec_l[i]))
             # ---- the actual wire: an int8 ring. all_gather over a manual
             # axis forces replication of the auto-sharded dims (measured
             # 256x byte blowup); collective-permute keeps each hop at
             # exactly one int8 shard, so the ring is N-1 shard-sized hops.
             perm = [(j, (j + 1) % n) for j in range(n)]
-            dhat_sum = squant_decode(q, scale)
-            qr, sr = q, scale
+            dhat_sum = wcl.decode(p_l)
+            pr = p_l
             for _ in range(n - 1):
-                qr = jax.lax.ppermute(qr, axes, perm)
-                sr = jax.lax.ppermute(sr, axes, perm)
-                dhat_sum = dhat_sum + squant_decode(qr, sr)
+                pr = jax.tree.map(lambda l: jax.lax.ppermute(l, axes, perm),
+                                  pr)
+                dhat_sum = dhat_sum + wcl.decode(pr)
             dhat_sum = _pin(dhat_sum, spec_l[i])
-            dhat_i = squant_decode(q, scale)
+            dhat_i = wcl.decode(p_l)
         else:
             dhat_i = delta * act_l
             dhat_sum = jax.lax.psum(dhat_i, axes)
@@ -549,8 +573,9 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
             out_hbar.append(hbar_l[i])
         if cfg.dwn_compress:
             # zero-byte broadcast: identical key -> identical compression
-            qd, sd = squant_encode(jax.random.fold_in(dwn_key, i), ghat, cfg.s)
-            ghat = squant_decode(qd, sd)
+            wcd = cfg.wire_codec(int(g.shape[-1]) if g.ndim else 1)
+            ghat = wcd.decode(wcd.encode(jax.random.fold_in(dwn_key, i),
+                                         ghat))
         out_agg.append(ghat.astype(g.dtype))
 
     agg = jax.tree.unflatten(treedef, out_agg)

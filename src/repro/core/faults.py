@@ -196,6 +196,83 @@ def corrupt_f32(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
     return jnp.where(hit, flipped, x.astype(jnp.float32))
 
 
+def corrupt_i32(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
+    """Flip one random bit of each int32 element (index payloads) with
+    probability ``rate``."""
+    kb, km = jax.random.split(key)
+    bit = jax.random.randint(kb, x.shape, 0, 32, dtype=jnp.int32)
+    hit = jax.random.bernoulli(km, rate, x.shape)
+    flipped = jnp.bitwise_xor(x, jnp.left_shift(jnp.int32(1), bit))
+    return jnp.where(hit, flipped, x)
+
+
+# ---------------------------------------------------------------------------
+# payload-level fault operators (codec WirePayloads — or any pytree)
+# ---------------------------------------------------------------------------
+
+def _lead_broadcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a leading-axes mask against a payload leaf (e.g. a [N]
+    per-worker mask against [N, d] levels and [N] scales)."""
+    mask = jnp.asarray(mask)
+    extra = leaf.ndim - mask.ndim
+    if extra > 0:
+        mask = mask.reshape(mask.shape + (1,) * extra)
+    return mask
+
+
+def corrupt_payload(key: jax.Array, payload, rate: float,
+                    only: Optional[jax.Array] = None):
+    """Flip bits of every wire leaf of ``payload`` uniformly, dispatching on
+    the leaf dtype (int8 levels, f32 scales/values, int32 indices).  Leaves
+    corrupt in sorted-key flatten order with keys split off ``key`` — for
+    the classic {levels, scales} payload this reproduces the pre-codec
+    ``kq, ks = split(key)`` streams bit-for-bit.  ``only``: optional {0,1}
+    mask (broadcast on leading axes) restricting corruption to payloads that
+    were actually sent."""
+    leaves, treedef = jax.tree.flatten(payload)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        if leaf.dtype == jnp.int8:
+            c = corrupt_int8(k, leaf, rate)
+        elif leaf.dtype == jnp.int32:
+            c = corrupt_i32(k, leaf, rate)
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            c = corrupt_f32(k, leaf, rate).astype(leaf.dtype)
+        else:
+            c = leaf
+        if only is not None:
+            c = jnp.where(_lead_broadcast(only, leaf) > 0, c, leaf)
+        out.append(c)
+    return jax.tree.unflatten(treedef, out)
+
+
+def mask_payload(payload, keep: jax.Array):
+    """PP2 inactivity on the payload representation: scale every FLOAT wire
+    leaf by ``keep`` so a masked payload decodes to exactly zero, while the
+    integer levels/indices ride along untouched (exactly the legacy
+    ``scale *= active`` mechanism, generalized).  No NaN cleanup here — an
+    unprotected corrupt payload must keep poisoning downstream arithmetic."""
+    def one(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf * _lead_broadcast(keep, leaf).astype(leaf.dtype)
+        return leaf
+    return jax.tree.map(one, payload)
+
+
+def scrub_payload(payload, valid: jax.Array):
+    """Server-side scrubbing: zero the non-finite float entries AND scale by
+    the ``valid`` checksum mask (``codec.Codec.validate``), so a corrupt
+    payload contributes exactly zero through the same zero-scale path PP2
+    uses for inactive workers."""
+    def one(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return nan_to_zero(leaf) * _lead_broadcast(valid, leaf
+                                                       ).astype(leaf.dtype)
+        return leaf
+    return jax.tree.map(one, payload)
+
+
 def inject_blowup(fc: FaultConfig, key: jax.Array, grads: jax.Array,
                   ) -> jax.Array:
     """Replace whole per-worker gradients ([N, ...]; axis 0 = workers) with

@@ -20,7 +20,8 @@ DEFAULT_BLOCK = _sq.DEFAULT_BLOCK
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
-        return jax.default_backend() == "cpu"
+        from repro.kernels import default_interpret
+        return default_interpret()
     return interpret
 
 

@@ -98,32 +98,54 @@ def collective_dtype_bytes(hlo_text: str) -> Dict[tuple, int]:
 # Compressed-collective wire models (bucketed pipelined ring vs leaf loop)
 # ---------------------------------------------------------------------------
 
+def _codec_split(codec, shape) -> Dict[str, float]:
+    """Per-message payload bytes by HLO dtype, read off the codec itself
+    (``core/codec.Codec.wire_bytes``) — the single source of truth the
+    models below share with the actual encoders."""
+    return {dt: float(b) for dt, b in codec.wire_bytes(tuple(shape)).items()}
+
+
+def _default_bucket_split(rows: int, row: int) -> Dict[str, float]:
+    # the native row-scale squant wire: int8 levels + f32 per-row scales
+    return {"s8": float(rows * row), "f32": float(4 * rows)}
+
+
 def bucketed_wire_model(*, n_workers: int, n_buckets: int, rows: int,
-                        row: int, ici_bw: float = ICI_BW,
+                        row: int, codec=None, ici_bw: float = ICI_BW,
                         hbm_bw: float = HBM_BW,
                         coll_lat: float = COLL_LAT) -> Dict[str, float]:
     """Collective-bytes + exposed-comm-time model for the bucketed ring
     (core/dist.bucket_ring_reduce; geometry from core/bucketing.BucketLayout).
 
-    Per hop, ONE stacked payload moves: ``n_buckets*rows*row`` int8 levels
-    plus ``4*n_buckets*rows`` f32 row-scales (two collective-permutes).  The
-    scan body appears ONCE in HLO (``hlo_s8_bytes`` is what a static HLO
-    parse sees) and executes ``n_workers-1`` times (``wire_bytes_per_step``).
-    The pipelined schedule overlaps each hop's wire time with the previous
-    payload's dequant-accumulate, so only ``max(comm, dequant) - dequant``
-    per hop is *exposed*; the sequential schedule exposes all of it.
+    Per hop, ONE stacked payload moves — for the default squant wire,
+    ``n_buckets*rows*row`` int8 levels plus ``4*n_buckets*rows`` f32
+    row-scales (one collective-permute per payload leaf).  Passing a
+    ``core/codec.py`` codec derives the byte split from its
+    ``wire_bytes((rows, row))`` instead (e.g. sparsify ships s32 indices +
+    f32 values).  The scan body appears ONCE in HLO (``hlo_bytes_by_dtype``
+    is what a static HLO parse sees) and executes ``n_workers-1`` times
+    (``wire_bytes_per_step``).  The pipelined schedule overlaps each hop's
+    wire time with the previous payload's dequant-accumulate, so only
+    ``max(comm, dequant) - dequant`` per hop is *exposed*; the sequential
+    schedule exposes all of it.
     """
     hops = n_workers - 1
-    level_b = float(n_buckets * rows * row)            # int8 levels
-    scale_b = float(4 * n_buckets * rows)              # f32 per-row scales
+    split = (_codec_split(codec, (rows, row)) if codec is not None
+             else _default_bucket_split(rows, row))
+    by_dtype = {dt: n_buckets * b for dt, b in split.items()}
+    level_b = by_dtype.get("s8", 0.0)          # int8 levels (0 for identity)
+    scale_b = sum(b for dt, b in by_dtype.items() if dt != "s8")
     payload = level_b + scale_b
-    hop_comm = payload / ici_bw + 2 * coll_lat         # q + scale permutes
-    # dequant-accumulate: read q (1B) + scales + acc (4B), write acc (4B)
-    hop_deq = (level_b + scale_b + 8.0 * level_b) / hbm_bw
+    n_leaves = len([b for b in by_dtype.values() if b > 0])
+    hop_comm = payload / ici_bw + max(n_leaves, 1) * coll_lat
+    # dequant-accumulate: read payload + acc (4B/elem), write acc (4B/elem)
+    elems = float(n_buckets * rows * row)
+    hop_deq = (payload + 8.0 * elems) / hbm_bw
     return {
         "payload_bytes": payload,
         "hlo_s8_bytes": level_b,
         "hlo_scale_bytes": scale_b,
+        "hlo_bytes_by_dtype": by_dtype,
         "wire_bytes_per_step": hops * payload,
         "comm_s": hops * hop_comm,
         "dequant_s": n_workers * hop_deq,
@@ -133,24 +155,33 @@ def bucketed_wire_model(*, n_workers: int, n_buckets: int, rows: int,
     }
 
 
-def leaf_wire_model(leaf_shapes, *, n_workers: int, ici_bw: float = ICI_BW,
-                    hbm_bw: float = HBM_BW,
+def leaf_wire_model(leaf_shapes, *, n_workers: int, codec=None,
+                    ici_bw: float = ICI_BW, hbm_bw: float = HBM_BW,
                     coll_lat: float = COLL_LAT) -> Dict[str, float]:
     """Same accounting for the legacy per-leaf sequential rings: every leaf
-    pays its own N-1 blocking hops (2 collectives + a dequant stall each),
-    and the unrolled hops all appear in static HLO."""
+    pays its own N-1 blocking hops (one collective per payload leaf + a
+    dequant stall each), and the unrolled hops all appear in static HLO."""
     hops = n_workers - 1
-    level_b = float(sum(int(np.prod(s)) if s else 1 for s in leaf_shapes))
-    scale_b = float(sum(
-        4 * (int(np.prod(s[:-1])) if len(s) > 1 else 1) for s in leaf_shapes))
+    by_dtype: Dict[str, float] = {}
+    for s in leaf_shapes:
+        split = (_codec_split(codec, s) if codec is not None
+                 else _default_bucket_split(
+                     int(np.prod(s[:-1])) if len(s) > 1 else 1,
+                     int(s[-1]) if s else 1))
+        for dt, b in split.items():
+            by_dtype[dt] = by_dtype.get(dt, 0.0) + b
+    level_b = by_dtype.get("s8", 0.0)
+    scale_b = sum(b for dt, b in by_dtype.items() if dt != "s8")
     n_leaves = len(leaf_shapes)
     payload = level_b + scale_b
+    elems = float(sum(int(np.prod(s)) if s else 1 for s in leaf_shapes))
     comm = hops * (payload / ici_bw + 2 * n_leaves * coll_lat)
-    deq = n_workers * (payload + 8.0 * level_b) / hbm_bw
+    deq = n_workers * (payload + 8.0 * elems) / hbm_bw
     return {
         "payload_bytes": payload,
         "hlo_s8_bytes": hops * level_b,      # unrolled: every hop is an instr
         "hlo_scale_bytes": hops * scale_b,
+        "hlo_bytes_by_dtype": {dt: hops * b for dt, b in by_dtype.items()},
         "wire_bytes_per_step": hops * payload,
         "comm_s": comm,
         "dequant_s": deq,
@@ -164,18 +195,39 @@ def wire_bytes_match(hlo_text: str, model: Dict[str, float], *,
                      tol: float = 0.10) -> Dict[str, float]:
     """Measured-vs-model check for the compressed ring's HLO wire format.
 
-    Returns {measured_s8, measured_scale_f32, model_s8, rel_err, ok}; ``ok``
-    requires s8 collective-permute bytes within ``tol`` of the model (the
-    guard that catches the ~256x replication blowup documented in
-    ``artemis_aggregate`` from silently regressing).
+    Returns {measured_s8, measured_scale_f32, model_s8, rel_err, ok,
+    by_dtype}.  Models carrying ``hlo_bytes_by_dtype`` (codec-derived) are
+    checked per payload dtype: every dtype the codec ships must appear as
+    collective-permute bytes within ``tol``.  Legacy models (bare
+    ``hlo_s8_bytes``) keep the original s8-only check — the guard that
+    catches the ~256x replication blowup documented in
+    ``artemis_aggregate`` from silently regressing.
     """
     by = collective_dtype_bytes(hlo_text)
     s8 = float(by.get(("collective-permute", "s8"), 0))
     f32 = float(by.get(("collective-permute", "f32"), 0))
+    out = {"measured_s8": s8, "measured_scale_f32": f32}
+    want_by = model.get("hlo_bytes_by_dtype")
+    if want_by:
+        checks = {}
+        ok = True
+        worst = 0.0
+        for dt, want in want_by.items():
+            if want <= 0:
+                continue
+            got = float(by.get(("collective-permute", dt), 0))
+            rel = abs(got - want) / max(want, 1.0)
+            checks[dt] = {"measured": got, "model": float(want), "rel_err": rel}
+            worst = max(worst, rel)
+            ok = ok and rel <= tol and got > 0
+        out.update({"model_s8": float(want_by.get("s8", 0.0)),
+                    "rel_err": worst, "ok": ok, "by_dtype": checks})
+        return out
     want = float(model["hlo_s8_bytes"])
     rel = abs(s8 - want) / max(want, 1.0)
-    return {"measured_s8": s8, "measured_scale_f32": f32,
-            "model_s8": want, "rel_err": rel, "ok": rel <= tol and s8 > 0}
+    out.update({"model_s8": want, "rel_err": rel,
+                "ok": rel <= tol and s8 > 0})
+    return out
 
 
 @dataclasses.dataclass

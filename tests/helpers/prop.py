@@ -46,7 +46,7 @@ except ImportError:  # pragma: no cover - exercised when hypothesis is absent
     # full ``max_examples``).
     _DEFAULT_EXAMPLES = 3
 
-    def given(*strategies):
+    def given(*strategies, **kw_strategies):
         def deco(fn):
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
@@ -55,11 +55,18 @@ except ImportError:  # pragma: no cover - exercised when hypothesis is absent
                         _DEFAULT_EXAMPLES)
                 for _ in range(n):
                     drawn = tuple(s.draw(rng) for s in strategies)
-                    fn(*args, *drawn, **kwargs)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
 
-            # hide the drawn params from pytest's fixture resolution
+            # hide ONLY the drawn params from pytest's fixture resolution;
+            # leftover params (pytest.mark.parametrize args) stay visible
             del wrapper.__dict__["__wrapped__"]
-            wrapper.__signature__ = inspect.Signature()
+            params = list(inspect.signature(fn).parameters.values())
+            if strategies:   # positional strategies consume trailing params
+                params = params[:-len(strategies)]
+            params = [p for p in params if p.name not in kw_strategies]
+            wrapper.__signature__ = inspect.Signature(params)
             return wrapper
 
         return deco

@@ -23,6 +23,8 @@ SCENARIOS = [
     "bucketed_convergence",
     "fault_zero_bitwise",
     "fault_matrix",
+    "codec_sparsify",
+    "codec_wire_guard",
 ]
 
 

@@ -1,0 +1,249 @@
+"""Conformance suite for the unified wire-codec layer (core/codec.py).
+
+Three contracts, checked for EVERY registered codec:
+
+  1. round-trip: ``decode(encode(key, x))`` restores shape/dtype, and for the
+     operators that predate the codec layer (squant / tile_squant / sparsify)
+     it is BITWISE identical to the legacy one-shot formulas (inlined here so
+     the pin survives the refactor that deleted them);
+  2. Assumption 5 (property test via helpers.prop): unbiased codecs satisfy
+     ``E[C(x)] ~= x`` and ``E||C(x) - x||^2 <= omega * ||x||^2``;
+  3. wire accounting: ``wire_bytes(shape)`` equals the actual payload leaf
+     nbytes by HLO dtype, and ``validate`` accepts clean payloads / rejects
+     scrambled ones (the server-side scrubbing contract of core/faults.py).
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from helpers.prop import given, settings, st  # noqa: E402
+
+from repro.core import codec as wire  # noqa: E402
+from repro.core import compression as comp  # noqa: E402
+from repro.core import faults  # noqa: E402
+
+D = 257
+KEY = jax.random.PRNGKey(0)
+X = jax.random.normal(jax.random.PRNGKey(7), (D,))
+
+CODEC_KWARGS = {
+    "identity": {},
+    "none": {},
+    "squant": {"s": 3},
+    "tile_squant": {"s": 2, "tile": 64},
+    "row_squant": {"s": 3},
+    "sparsify": {"q": 0.3},
+    "topk": {"frac": 0.1},
+}
+
+_HLO_DTYPE = {"int8": "s8", "int32": "s32", "float32": "f32"}
+
+
+def _codec(name):
+    return wire.make_codec(name, D, **CODEC_KWARGS[name])
+
+
+# ---------------------------------------------------------------------------
+# registry + round-trip conformance
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_legacy_operators():
+    names = wire.available()
+    for want in ("identity", "none", "squant", "tile_squant", "row_squant",
+                 "sparsify", "topk"):
+        assert want in names
+    with pytest.raises(ValueError):
+        wire.make_codec("mystery", D)
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_KWARGS))
+def test_roundtrip_shape_dtype(name):
+    c = _codec(name)
+    p = c.encode(KEY, X)
+    xh = c.decode(p)
+    assert xh.shape == X.shape and xh.dtype == X.dtype
+    # 2-D input round-trips too (the mesh hands codecs [rows, row] buckets)
+    x2 = jax.random.normal(jax.random.PRNGKey(8), (33, 65))
+    xh2 = c.decode(c.encode(jax.random.PRNGKey(4), x2))
+    assert xh2.shape == x2.shape
+    # __call__ is exactly the round-trip
+    np.testing.assert_array_equal(np.asarray(c(KEY, X)), np.asarray(xh))
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_KWARGS))
+def test_compressor_wrapper_matches_codec(name):
+    """core/compression.py's Compressor is a thin wrapper: same omega, same
+    bits metering, bitwise-identical compress."""
+    c = _codec(name)
+    cw = comp.make_compressor(name, D, **CODEC_KWARGS[name])
+    assert cw.omega == c.omega
+    assert cw.bits(D) == c.bits(D)
+    np.testing.assert_array_equal(np.asarray(cw(KEY, X)),
+                                  np.asarray(c(KEY, X)))
+
+
+def _legacy_squant(key, x, s):
+    # the pre-codec one-shot operator, verbatim: sign * norm * psi / s
+    norm = jnp.linalg.norm(x)
+    r = jnp.where(norm > 0, jnp.abs(x) / norm * s, jnp.zeros_like(x))
+    low = jnp.floor(r)
+    u = jax.random.uniform(key, x.shape)
+    psi = low + (u < (r - low)).astype(x.dtype)
+    return jnp.sign(x) * norm * psi / s
+
+
+def test_squant_bitwise_vs_legacy():
+    for s in (1, 3, 7):
+        c = wire.make_codec("squant", D, s=s)
+        np.testing.assert_array_equal(
+            np.asarray(c(KEY, X)), np.asarray(_legacy_squant(KEY, X, s)))
+
+
+def test_tile_squant_bitwise_vs_legacy():
+    s, tile = 2, 64
+    c = wire.make_codec("tile_squant", D, s=s, tile=tile)
+    pad = (-D) % tile
+    tiles = jnp.pad(X, (0, pad)).reshape(-1, tile)
+    norms = jnp.linalg.norm(tiles, axis=1, keepdims=True)
+    r = jnp.where(norms > 0, jnp.abs(tiles) / norms * s,
+                  jnp.zeros_like(tiles))
+    low = jnp.floor(r)
+    u = jax.random.uniform(KEY, tiles.shape)
+    psi = low + (u < (r - low)).astype(tiles.dtype)
+    legacy = (jnp.sign(tiles) * norms * psi / s).reshape(-1)[:D]
+    np.testing.assert_array_equal(np.asarray(c(KEY, X)), np.asarray(legacy))
+
+
+def test_sparsify_bitwise_vs_legacy():
+    q = 0.3
+    c = wire.make_codec("sparsify", D, q=q)
+    mask = jax.random.bernoulli(KEY, q, X.shape)
+    legacy = jnp.where(mask, X / q, 0.0)
+    np.testing.assert_array_equal(np.asarray(c(KEY, X)), np.asarray(legacy))
+
+
+def test_topk_exact_k_on_ties():
+    """The old sort-threshold + >= kept every tied coordinate (>k coords);
+    jax.lax.top_k ships exactly k."""
+    x = jnp.concatenate([jnp.full((50,), 2.0), jnp.full((50,), -2.0),
+                         0.01 * jnp.arange(100, dtype=jnp.float32)])
+    c = wire.make_codec("topk", x.size, frac=0.1)
+    k = max(1, int(x.size * 0.1))
+    p = c.encode(KEY, x)
+    assert p["indices"].shape == (k,)
+    xh = c.decode(p)
+    assert int(jnp.sum(xh != 0)) == k
+    # every kept coordinate is one of the tied max-magnitude entries, exact
+    np.testing.assert_array_equal(np.asarray(jnp.abs(xh[xh != 0])),
+                                  np.full((k,), 2.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Assumption 5 properties (E[C(x)] ~= x, var <= omega ||x||^2)
+# ---------------------------------------------------------------------------
+
+UNBIASED = sorted(n for n in CODEC_KWARGS if _codec(n).unbiased)
+
+
+@pytest.mark.parametrize("name", UNBIASED)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_assumption5_unbiased_bounded_variance(name, seed):
+    c = _codec(name)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 1000), (D,))
+    keys = jax.random.split(jax.random.PRNGKey(seed), 512)
+    ys = jax.vmap(lambda k: c(k, x))(keys)
+    mean = jnp.mean(ys, axis=0)
+    nx = float(jnp.linalg.norm(x))
+    # E[C(x)] ~= x within Monte-Carlo error of the variance bound
+    se = float(jnp.sqrt(c.omega + 1e-12) * nx / np.sqrt(512))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x),
+                               atol=max(5 * se, 1e-6))
+    # empirical variance within the Assumption-5 bound (20% MC slack)
+    var = float(jnp.mean(jnp.sum(jnp.square(ys - x[None]), axis=-1)))
+    assert var <= 1.2 * c.omega * nx**2 + 1e-6, (name, var, c.omega * nx**2)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting + validate/scrub contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CODEC_KWARGS))
+def test_wire_bytes_match_payload_nbytes(name):
+    c = _codec(name)
+    for shape in [(D,), (33, 65)]:
+        x = jax.random.normal(jax.random.PRNGKey(9), shape)
+        p = c.encode(KEY, x)
+        got = {}
+        for leaf in jax.tree.leaves(p):
+            dt = _HLO_DTYPE[str(leaf.dtype)]
+            got[dt] = got.get(dt, 0) + leaf.nbytes
+        assert got == c.wire_bytes(shape), (name, shape)
+        assert c.wire_bytes_total(shape) == sum(got.values())
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_KWARGS))
+def test_validate_accepts_clean_rejects_nan_scales(name):
+    c = _codec(name)
+    p = c.encode(KEY, X)
+    assert float(c.validate(p)) == 1.0
+    # poison every float leaf with NaN: validate must flag the payload
+    bad = jax.tree.map(
+        lambda l: jnp.full_like(l, jnp.nan)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, p)
+    assert float(c.validate(bad)) == 0.0
+
+
+def test_corrupt_validate_scrub_pipeline():
+    """faults.corrupt_payload flips payload bits uniformly across leaf
+    dtypes; validate catches out-of-range levels; scrub_payload zeroes the
+    flagged payload so decode is exactly 0."""
+    c = wire.make_codec("squant", D, s=3)
+    p = c.encode(KEY, X)
+    crpt = faults.corrupt_payload(jax.random.PRNGKey(11), p, rate=0.5)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(crpt)))
+    assert changed, "corrupt_payload at rate=0.5 must flip something"
+    # zero rate is the identity, bitwise
+    clean = faults.corrupt_payload(jax.random.PRNGKey(11), p, rate=0.0)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(clean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    valid = c.validate(crpt)
+    scrubbed = faults.scrub_payload(crpt, valid)
+    if float(valid) == 0.0:
+        assert float(jnp.sum(jnp.abs(c.decode(scrubbed)))) == 0.0
+    # a forced-invalid payload scrubs to zero regardless
+    z = faults.scrub_payload(crpt, jnp.zeros(()))
+    assert float(jnp.sum(jnp.abs(c.decode(z)))) == 0.0
+
+
+def test_mask_payload_zeroes_float_leaves_only():
+    c = wire.make_codec("squant", D, s=3)
+    p = c.encode(KEY, X)
+    off = faults.mask_payload(p, jnp.zeros(()))
+    assert float(jnp.sum(jnp.abs(c.decode(off)))) == 0.0
+    # int levels ride untouched (the PP2 zero-scale trick keeps wire shape)
+    np.testing.assert_array_equal(np.asarray(off["levels"]),
+                                  np.asarray(p["levels"]))
+
+
+def test_payload_is_a_pytree():
+    """WirePayload vmaps/jits like any value and flattens sorted-by-key
+    (the fault-stream order contract)."""
+    c = wire.make_codec("squant", D, s=3)
+    xs = jax.random.normal(KEY, (4, D))
+    keys = jax.random.split(KEY, 4)
+    stacked = jax.vmap(c.encode)(keys, xs)
+    assert stacked["levels"].shape == (4, D)
+    leaves, treedef = jax.tree.flatten(stacked)
+    aux_keys = treedef.children()[0] if False else tuple(sorted(stacked.data))
+    assert aux_keys == ("levels", "scales")
+    out = jax.jit(jax.vmap(c.decode))(stacked)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jax.vmap(c)(keys, xs)))

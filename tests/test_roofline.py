@@ -78,6 +78,55 @@ def test_wire_bytes_match_guard():
     assert not none["ok"]                  # zero measured s8 never passes
 
 
+def test_bucketed_wire_model_from_codec():
+    """Passing a core/codec.py codec derives the byte split from its
+    wire_bytes — identical to the legacy analytic split for row_squant, and
+    a genuinely different wire (s32 indices + f32 values) for sparsify."""
+    from repro.core import codec as wire
+    rq = wire.make_codec("row_squant", 256, s=3)
+    m_codec = R.bucketed_wire_model(n_workers=4, n_buckets=8, rows=33,
+                                    row=256, codec=rq)
+    m_legacy = R.bucketed_wire_model(n_workers=4, n_buckets=8, rows=33,
+                                     row=256)
+    for k in ("payload_bytes", "hlo_s8_bytes", "hlo_scale_bytes",
+              "wire_bytes_per_step", "comm_s", "exposed_comm_s"):
+        assert m_codec[k] == m_legacy[k], k
+    assert m_codec["hlo_bytes_by_dtype"] == {"s8": 8 * 33 * 256.0,
+                                             "f32": 8 * 4 * 33.0}
+
+    sp = wire.make_codec("sparsify", 256, q=0.5)
+    m_sp = R.bucketed_wire_model(n_workers=4, n_buckets=8, rows=33, row=256,
+                                 codec=sp)
+    n = 33 * 256
+    assert m_sp["hlo_bytes_by_dtype"] == {"s32": 8 * 4.0 * n,
+                                          "f32": 8 * 4.0 * n}
+    assert m_sp["hlo_s8_bytes"] == 0.0
+
+
+def test_leaf_wire_model_from_codec():
+    from repro.core import codec as wire
+    shapes = [(64, 64), (64,), (64, 1)]
+    rq = wire.make_codec("row_squant", 64, s=3)
+    m_codec = R.leaf_wire_model(shapes, n_workers=4, codec=rq)
+    m_legacy = R.leaf_wire_model(shapes, n_workers=4)
+    for k in ("payload_bytes", "hlo_s8_bytes", "hlo_scale_bytes", "comm_s"):
+        assert m_codec[k] == m_legacy[k], k
+
+
+def test_wire_bytes_match_per_dtype():
+    """Codec-derived models check EVERY payload dtype, not just s8."""
+    m = {"hlo_bytes_by_dtype": {"s8": 32 * 16.0}}
+    ok = R.wire_bytes_match(HLO, m)
+    assert ok["ok"] and ok["by_dtype"]["s8"]["rel_err"] == 0.0
+    # a dtype the HLO does not carry fails the guard
+    m2 = {"hlo_bytes_by_dtype": {"s8": 32 * 16.0, "s32": 1024.0}}
+    assert not R.wire_bytes_match(HLO, m2)["ok"]
+    # byte mismatch on a present dtype fails too
+    m3 = {"hlo_bytes_by_dtype": {"s8": 32 * 16 * 2.0}}
+    bad = R.wire_bytes_match(HLO, m3)
+    assert not bad["ok"] and bad["rel_err"] == pytest.approx(0.5)
+
+
 def test_roofline_terms_and_dominant():
     rl = R.Roofline(arch="a", shape="s", mesh="pod", chips=256, kind="train",
                     hlo_flops=197e12, hlo_bytes=819e9 * 2,

@@ -171,15 +171,52 @@ def test_pallas_round_pp1(variant="artemis"):
     np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), atol=1e-5)
 
 
-def test_pallas_backend_rejects_unsupported():
-    g = jnp.ones((N, D))
-    cfg = art.variant_config("sgd", D, N)          # identity uplink
-    with pytest.raises(NotImplementedError):
-        art.artemis_round(cfg, art.init_state(cfg), g, KEY, backend="pallas")
-    cfg_ef = art.variant_config("dore", D, N)      # error feedback
-    with pytest.raises(NotImplementedError):
-        art.artemis_round(cfg_ef, art.init_state(cfg_ef), g, KEY,
-                          backend="pallas")
+def test_pallas_backend_falls_back_and_supports_ef():
+    """Codec dispatch replaced the old hard-fail table: non-fusable codecs
+    on backend='pallas' take the dense uplink BITWISE, and error feedback
+    now runs through the fused kernel (Dore-on-Pallas)."""
+    g = jax.random.normal(KEY, (N, D))
+    act = jnp.ones((N, 1))
+    # identity uplink (sgd): no fused kernel family -> dense path, bitwise
+    cfg = art.variant_config("sgd", D, N)
+    o_d, st_d, _ = art.artemis_round(cfg, art.init_state(cfg), g, KEY, act,
+                                     backend="dense")
+    o_p, st_p, _ = art.artemis_round(cfg, art.init_state(cfg), g, KEY, act,
+                                     backend="pallas")
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_d))
+    np.testing.assert_array_equal(np.asarray(st_p.h), np.asarray(st_d.h))
+    # error feedback on the fused squant uplink matches dense to kernel tol
+    cfg_ef = art.variant_config("dore", D, N, s=2, p=0.6)
+    st0 = art.init_state(cfg_ef)._replace(
+        e=0.1 * jax.random.normal(jax.random.PRNGKey(5), (N, D)),
+        h=0.3 * jax.random.normal(jax.random.PRNGKey(6), (N, D)))
+    a = (jax.random.uniform(jax.random.PRNGKey(7), (N,)) < 0.6
+         ).astype(jnp.float32)
+    o_d, st_d, _ = art.artemis_round(cfg_ef, st0, g, KEY, a, backend="dense")
+    o_p, st_p, _ = art.artemis_round(cfg_ef, st0, g, KEY, a, backend="pallas")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_p.e), np.asarray(st_d.e),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_p.h), np.asarray(st_d.h),
+                               atol=1e-5)
+
+
+def test_unknown_backend_rejected():
+    cfg = art.variant_config("artemis", D, N)
+    with pytest.raises(ValueError):
+        art.artemis_round(cfg, art.init_state(cfg), jnp.ones((N, D)), KEY,
+                          backend="mystery")
+
+
+def test_pallas_sweep_dore(prob):
+    """Dore (EF) now runs end-to-end on the pallas sweep backend."""
+    cfgs = [art.variant_config("dore", D, N, s=3, p=0.7)]
+    r_p = sw.run_sweep(prob, cfgs, [0.02], [0], iters=15, batch=4,
+                       backend="pallas")
+    r_d = sw.run_sweep(prob, cfgs, [0.02], [0], iters=15, batch=4,
+                       backend="dense")
+    assert np.all(np.isfinite(r_p.losses))
+    np.testing.assert_allclose(r_p.losses, r_d.losses, rtol=1e-4, atol=1e-6)
 
 
 def test_pallas_sweep(prob):
