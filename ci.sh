@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Minimal CI gate. Stages:
-#   0. repo hygiene     (no tracked bytecode) + codec conformance: the
-#      wire-codec registry suite and the all-codec HLO wire-format guard
-#      (roofline wire_bytes vs measured collective-permute bytes per dtype)
+#   0. static analysis  (repro.analysis --ci: ast lint incl. the
+#      tracked-bytecode hygiene rule, compile-count trace audit, HLO
+#      wire/donation/host-transfer checks; fails on any unsuppressed
+#      finding) + codec conformance: the wire-codec registry suite and the
+#      all-codec HLO wire-format guard (roofline wire_bytes vs measured
+#      collective-permute bytes per dtype)
 #   1. fast test tier   (tier-1: pytest default set, < 2 min budget)
 #   2. slow test tier   (model-zoo smoke, XLA-compile bound)
 #   3. benchmark smoke  (one grid cell per suite; catches API rot cheaply;
@@ -14,13 +17,8 @@ set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== stage 0: hygiene + codec conformance ==="
-tracked_pyc=$(git ls-files '*.pyc' '*.pyo' '**/__pycache__/*' || true)
-if [ -n "$tracked_pyc" ]; then
-  echo "tracked bytecode files must not be committed:" >&2
-  echo "$tracked_pyc" >&2
-  exit 1
-fi
+echo "=== stage 0: static analysis + codec conformance ==="
+python -m repro.analysis --ci
 python -m pytest -x -q tests/test_codec.py
 python tests/helpers/bucket_scenarios.py codec_wire_guard
 

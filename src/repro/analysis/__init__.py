@@ -1,0 +1,23 @@
+"""repro.analysis — JAX/Pallas-aware lint + trace/HLO contract auditor.
+
+Three layers (DESIGN.md §10), all reporting ``findings.Finding``:
+
+  * ``astlint``     — stdlib-ast rules over source (PRNG discipline, tracer
+                      branching, jit'd mutable globals, hard-coded
+                      ``interpret=``, unhashable statics, repo hygiene).
+  * ``trace_audit`` — executes registered entry points under
+                      ``jax_log_compiles`` and asserts the one-compile
+                      contract (sweep grid, artemis_round per backend, the
+                      bucketed pipelined ring).
+  * ``hlo_checks``  — static StableHLO/HLO inspection (compressed wire
+                      stays compressed, donated carries alias outputs, no
+                      host transfers).
+
+CLI: ``python -m repro.analysis [--ci] [--json F] [--sarif F] ...`` — lint
+only by default; ``--ci`` adds the dynamic audits and is the ci.sh gate.
+"""
+from repro.analysis.findings import (Finding, active, apply_baseline,
+                                     load_baseline, to_json, to_sarif)
+
+__all__ = ["Finding", "active", "apply_baseline", "load_baseline",
+           "to_json", "to_sarif"]

@@ -1,0 +1,77 @@
+"""CLI driver: ``python -m repro.analysis``.
+
+Exit status: 0 when no *active* finding remains (errors and warnings count;
+info and suppressed findings don't), 1 otherwise — so ``--ci`` is a direct
+shell gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import findings as F
+from repro.analysis import astlint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas lint + trace/HLO contract audits")
+    ap.add_argument("--paths", nargs="*", default=["src"],
+                    help="files/dirs to lint (default: src)")
+    ap.add_argument("--ci", action="store_true",
+                    help="full gate: lint + hygiene + trace audit + HLO "
+                         "checks (what ci.sh runs)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the compile-count trace audit")
+    ap.add_argument("--hlo", action="store_true",
+                    help="run the static HLO checks")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the multi-device subprocess audits (faster; "
+                         "for laptops without the 570s budget)")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="suppression file (default: analysis_baseline.json;"
+                         " missing file = no suppressions)")
+    ap.add_argument("--json", metavar="FILE",
+                    help="write findings as JSON (- for stdout)")
+    ap.add_argument("--sarif", metavar="FILE",
+                    help="write findings as SARIF 2.1.0 (- for stdout)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the per-finding text report")
+    args = ap.parse_args(argv)
+
+    fs = astlint.lint_paths(args.paths, rel_to=".")
+    fs.extend(astlint.hygiene_findings("."))
+
+    if args.ci or args.trace:
+        from repro.analysis import trace_audit
+        only = () if not args.no_mesh else tuple(
+            e for e in trace_audit.ENTRY_POINTS if e != "bucket_ring")
+        fs.extend(trace_audit.audit_entry_points(only))
+    if args.ci or args.hlo:
+        from repro.analysis import hlo_checks
+        fs.extend(hlo_checks.audit_all(mesh=not args.no_mesh))
+
+    F.apply_baseline(fs, F.load_baseline(args.baseline))
+    act = F.active(fs)
+
+    if not args.quiet:
+        for f in fs:
+            print(f.format())
+        n_sup = sum(1 for f in fs if f.suppressed)
+        print(f"repro.analysis: {len(act)} active finding(s), "
+              f"{n_sup} suppressed, {len(fs)} total")
+    for path, render in ((args.json, F.to_json), (args.sarif, F.to_sarif)):
+        if not path:
+            continue
+        text = render(fs)
+        if path == "-":
+            print(text)
+        else:
+            with open(path, "w") as fh:
+                fh.write(text + "\n")
+    return 1 if act else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

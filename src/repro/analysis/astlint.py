@@ -1,0 +1,500 @@
+"""stdlib-``ast`` lint rules for JAX/Pallas discipline (DESIGN.md §10).
+
+Rules (ids are stable — they key the baseline file and SARIF output):
+
+  prng-key-reuse         error    the same PRNG key expression is *strongly*
+                                  consumed (sampled from, or split) more than
+                                  once in one function scope.  Multiple
+                                  ``fold_in`` derivations off one key are the
+                                  repo's idiomatic salted side streams and are
+                                  NOT counted (weak consumption).
+  prng-split-overflow    error    ``ks = jax.random.split(key, N)`` followed
+                                  by a subscript ``ks[i]`` with ``i >= N``.
+  tracer-python-branch   warning  ``if``/``while``/``assert`` test calls into
+                                  ``jnp.*`` / ``jax.numpy.*`` — Python control
+                                  flow on a traced value fails (or silently
+                                  constant-folds) under ``jit``.
+  jit-mutable-global     warning  a jit-wrapped function declares ``global``
+                                  (module state mutated at trace time only)
+                                  or closes over a module-level mutable
+                                  literal (dict/list/set) — both are invisible
+                                  to XLA after the first trace.
+  hardcoded-interpret    warning  a call site passes a constant
+                                  ``interpret=True/False`` instead of routing
+                                  through ``kernels.default_interpret()`` —
+                                  pins CPU-interpret (or Mosaic) regardless of
+                                  backend/REPRO_INTERPRET.
+  static-unhashable-default error a parameter named in ``static_argnames``
+                                  has an unhashable (list/dict/set) default —
+                                  every call through the default raises
+                                  inside ``jit``.
+  tracked-bytecode       error    repo hygiene: ``git ls-files`` reports
+                                  committed ``.pyc``/``.pyo``/``__pycache__``
+                                  entries (moved here from the old ci.sh
+                                  stage-0 inline check).
+
+Inline suppression: ``# repro-lint: allow=<rule>[,<rule>]`` on the flagged
+line or on the enclosing ``def`` line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import subprocess
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "prng-key-reuse": "error",
+    "prng-split-overflow": "error",
+    "tracer-python-branch": "warning",
+    "jit-mutable-global": "warning",
+    "hardcoded-interpret": "warning",
+    "static-unhashable-default": "error",
+    "tracked-bytecode": "error",
+}
+
+# jax.random functions that *strongly* consume their key argument: the key
+# must never reach two of these.
+_STRONG_KEY_FNS = frozenset({
+    "split", "normal", "uniform", "bernoulli", "randint", "permutation",
+    "choice", "truncated_normal", "gamma", "exponential", "laplace",
+    "categorical", "bits", "gumbel", "beta", "dirichlet", "poisson",
+    "rademacher", "cauchy", "multivariate_normal", "shuffle",
+})
+# weak consumption: deriving a salted stream is idiomatic repo practice
+# (fold_in(key, SALT) next to split(key) — see core/sweep.py micro body)
+_WEAK_KEY_FNS = frozenset({"fold_in"})
+
+_PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*allow=([\w,\-]+)")
+
+# jnp functions that inspect dtype/shape metadata, not array values — safe in
+# Python control flow even under jit (they never return tracers)
+_METADATA_FNS = frozenset({
+    "issubdtype", "isdtype", "result_type", "promote_types", "dtype",
+    "ndim", "shape", "size", "iscomplexobj", "isrealobj", "can_cast",
+})
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for Attribute chains, 'split' for Names."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_random_call(call: ast.Call) -> Optional[str]:
+    """The jax.random function name if ``call`` is one, else None."""
+    dn = _dotted(call.func)
+    if dn is None:
+        return None
+    parts = dn.split(".")
+    fn = parts[-1]
+    if fn not in _STRONG_KEY_FNS and fn not in _WEAK_KEY_FNS:
+        return None
+    # require an explicit random namespace: jax.random.split, random.split,
+    # jrandom.split ... (a bare `split(...)` is likely user code)
+    if len(parts) < 2 or "random" not in parts[-2] and parts[-2] != "jr":
+        return None
+    return fn
+
+
+def _key_expr(call: ast.Call) -> Optional[Tuple[str, object]]:
+    """(base_name, subscript_index|'') of the key argument, or None if the
+    key is an arbitrary expression (fresh derivation — nothing to track)."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Name):
+        return (arg.id, "")
+    if (isinstance(arg, ast.Subscript) and isinstance(arg.value, ast.Name)
+            and isinstance(arg.slice, ast.Constant)
+            and isinstance(arg.slice.value, int)):
+        return (arg.value.id, arg.slice.value)
+    return None
+
+
+def _fmt_key(name: str, idx) -> str:
+    return f"{name}[{idx}]" if idx != "" else name
+
+
+class _FunctionScope:
+    """Per-function PRNG bookkeeping (generation-aware: rebinding a name
+    starts a fresh key)."""
+
+    def __init__(self):
+        self.gen: Dict[str, int] = {}
+        self.strong: Dict[Tuple[str, int, object], Tuple[int, str]] = {}
+        self.splits: Dict[Tuple[str, int], int] = {}   # (name, gen) -> count
+
+    def generation(self, name: str) -> int:
+        return self.gen.get(name, 0)
+
+    def bump(self, name: str):
+        self.gen[name] = self.gen.get(name, 0) + 1
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self.jitted_names: Set[str] = set()
+        self.static_names: Dict[str, Tuple[str, ...]] = {}
+        self.module_mutables: Dict[str, int] = {}      # name -> lineno
+        self.def_line_stack: List[int] = []
+
+    # -- finding helper with pragma handling --------------------------------
+
+    def emit(self, rule: str, line: int, message: str):
+        f = Finding(rule=rule, severity=RULES[rule], path=self.path,
+                    line=line, message=message)
+        for ln in (line, *self.def_line_stack[-1:]):
+            if 1 <= ln <= len(self.lines):
+                m = _PRAGMA_RE.search(self.lines[ln - 1])
+                if m and rule in m.group(1).split(","):
+                    f.suppressed, f.suppressed_by = True, "pragma"
+                    break
+        self.findings.append(f)
+
+    # -- module-level pre-pass ----------------------------------------------
+
+    def scan_module(self, tree: ast.Module):
+        """Collect jit-wrapped function names, their static_argnames, and
+        module-level mutable-literal globals before the main walk."""
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                dn = _dotted(node.func)
+                if dn in ("jax.jit", "jit", "pjit", "jax.pjit"):
+                    # jax.jit(fn, ...) with a plain function reference
+                    if node.args and isinstance(node.args[0], ast.Name):
+                        self.jitted_names.add(node.args[0].id)
+                        self._record_statics(node, node.args[0].id)
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    names = self._jit_decorator(dec)
+                    if names is not None:
+                        self.jitted_names.add(node.name)
+                        if names:
+                            self.static_names[node.name] = names
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and isinstance(
+                    stmt.value, (ast.Dict, ast.List, ast.Set)):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.module_mutables[t.id] = stmt.lineno
+
+    def _jit_decorator(self, dec: ast.AST) -> Optional[Tuple[str, ...]]:
+        """static_argnames tuple if ``dec`` is a jit decorator (possibly via
+        functools.partial), else None."""
+        if isinstance(dec, ast.Name) and dec.id in ("jit",):
+            return ()
+        if isinstance(dec, ast.Attribute) and _dotted(dec) in (
+                "jax.jit", "jax.pjit"):
+            return ()
+        if isinstance(dec, ast.Call):
+            dn = _dotted(dec.func)
+            if dn in ("jax.jit", "jit", "jax.pjit", "pjit"):
+                return self._statics_from_call(dec)
+            if dn in ("functools.partial", "partial"):
+                if dec.args and _dotted(dec.args[0]) in ("jax.jit", "jit",
+                                                         "jax.pjit", "pjit"):
+                    return self._statics_from_call(dec)
+        return None
+
+    def _statics_from_call(self, call: ast.Call) -> Tuple[str, ...]:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    return (v.value,)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    return tuple(e.value for e in v.elts
+                                 if isinstance(e, ast.Constant))
+        return ()
+
+    def _record_statics(self, call: ast.Call, fn_name: str):
+        statics = self._statics_from_call(call)
+        if statics:
+            self.static_names[fn_name] = statics
+
+    # -- main walk -----------------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.def_line_stack.append(node.lineno)
+        self._check_static_defaults(node)
+        if node.name in self.jitted_names:
+            self._check_jit_globals(node)
+        self._lint_prng(node)
+        self.generic_visit(node)   # recurses into nested defs
+        self.def_line_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_If(self, node: ast.If):
+        self._check_tracer_branch(node.test, node.lineno, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        self._check_tracer_branch(node.test, node.lineno, "while")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert):
+        self._check_tracer_branch(node.test, node.lineno, "assert")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        self._check_interpret_kw(node)
+        self.generic_visit(node)
+
+    # -- rule: tracer-python-branch ------------------------------------------
+
+    def _check_tracer_branch(self, test: ast.AST, line: int, kind: str):
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Call):
+                dn = _dotted(sub.func) or ""
+                head = dn.split(".")[0]
+                if (head == "jnp" or dn.startswith("jax.numpy.")) and \
+                        dn.split(".")[-1] not in _METADATA_FNS:
+                    self.emit(
+                        "tracer-python-branch", line,
+                        f"Python `{kind}` on `{dn}(...)`: a traced array in "
+                        f"host control flow triggers ConcretizationError "
+                        f"under jit (use lax.cond/jnp.where, or hoist the "
+                        f"value out of the traced region)")
+                    return
+
+    # -- rule: hardcoded-interpret -------------------------------------------
+
+    def _check_interpret_kw(self, call: ast.Call):
+        if os.path.basename(self.path) == "__init__.py" and \
+                "kernels" in self.path:
+            return
+        for kw in call.keywords:
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, bool):
+                self.emit(
+                    "hardcoded-interpret", call.lineno,
+                    f"call passes interpret={kw.value.value} as a constant; "
+                    f"route through kernels.default_interpret() so "
+                    f"REPRO_INTERPRET / the backend choose the mode")
+
+    # -- rule: static-unhashable-default -------------------------------------
+
+    def _check_static_defaults(self, node: ast.FunctionDef):
+        statics = self.static_names.get(node.name)
+        if not statics:
+            return
+        args = node.args
+        pos = args.posonlyargs + args.args
+        defaults = [None] * (len(pos) - len(args.defaults)) + list(args.defaults)
+        pairs = list(zip(pos, defaults)) + list(
+            zip(args.kwonlyargs, args.kw_defaults))
+        for a, d in pairs:
+            if a.arg in statics and isinstance(d, (ast.Dict, ast.List,
+                                                   ast.Set)):
+                self.emit(
+                    "static-unhashable-default", node.lineno,
+                    f"static_argnames parameter {a.arg!r} of {node.name!r} "
+                    f"defaults to an unhashable "
+                    f"{type(d).__name__.lower()} literal — any call relying "
+                    f"on the default raises inside jit")
+
+    # -- rule: jit-mutable-global --------------------------------------------
+
+    def _check_jit_globals(self, node: ast.FunctionDef):
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Global):
+                self.emit(
+                    "jit-mutable-global", sub.lineno,
+                    f"jit-wrapped {node.name!r} mutates module global(s) "
+                    f"{', '.join(sub.names)}: the write happens at trace "
+                    f"time only and is invisible on cached executions")
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                    and sub.id in self.module_mutables:
+                self.emit(
+                    "jit-mutable-global", sub.lineno,
+                    f"jit-wrapped {node.name!r} reads module-level mutable "
+                    f"{sub.id!r} (defined line "
+                    f"{self.module_mutables[sub.id]}): its contents are "
+                    f"baked in at trace time; later mutation silently "
+                    f"diverges from the compiled program")
+
+    # -- rules: prng-key-reuse / prng-split-overflow --------------------------
+
+    def _lint_prng(self, fn: ast.FunctionDef):
+        scope = _FunctionScope()
+        self._prng_stmts(fn.body, scope)
+
+    def _prng_stmts(self, stmts: Sequence[ast.stmt], scope: _FunctionScope):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue   # nested scope: linted by its own visit
+            self._prng_exprs(stmt, scope)
+            if isinstance(stmt, ast.Assign):
+                self._prng_assign(stmt, scope)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                t = stmt.target
+                if isinstance(t, ast.Name):
+                    scope.bump(t.id)
+            elif isinstance(stmt, ast.For):
+                if isinstance(stmt.target, ast.Name):
+                    scope.bump(stmt.target.id)
+                self._prng_stmts(stmt.body, scope)
+                self._prng_stmts(stmt.orelse, scope)
+            elif isinstance(stmt, ast.While):
+                self._prng_stmts(stmt.body, scope)
+                self._prng_stmts(stmt.orelse, scope)
+            elif isinstance(stmt, ast.If):
+                # mutually exclusive branches may each consume the same key
+                # exactly once — fork the consumption map, then union so code
+                # *after* the If still sees both branches' consumptions
+                base = dict(scope.strong)
+                self._prng_stmts(stmt.body, scope)
+                body_strong = scope.strong
+                scope.strong = dict(base)
+                self._prng_stmts(stmt.orelse, scope)
+                for slot, v in body_strong.items():
+                    scope.strong.setdefault(slot, v)
+            elif isinstance(stmt, ast.With):
+                self._prng_stmts(stmt.body, scope)
+            elif isinstance(stmt, ast.Try):
+                self._prng_stmts(stmt.body, scope)
+                for h in stmt.handlers:
+                    self._prng_stmts(h.body, scope)
+                self._prng_stmts(stmt.orelse, scope)
+                self._prng_stmts(stmt.finalbody, scope)
+
+    def _prng_exprs(self, stmt: ast.stmt, scope: _FunctionScope):
+        """Record key consumptions + split-overflow subscripts that appear
+        directly in this statement (not in nested blocks)."""
+        blocks = []
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            blocks.extend(getattr(stmt, field, []) or [])
+        nested = {id(n) for b in blocks for n in ast.walk(b)
+                  if isinstance(b, ast.AST)}
+        for node in ast.walk(stmt):
+            if id(node) in nested:
+                continue
+            if isinstance(node, ast.Call):
+                fn = _is_random_call(node)
+                if fn in _STRONG_KEY_FNS:
+                    self._consume(node, scope)
+            if isinstance(node, ast.Subscript) and \
+                    isinstance(node.value, ast.Name) and \
+                    isinstance(node.slice, ast.Constant) and \
+                    isinstance(node.slice.value, int):
+                name = node.value.id
+                count = scope.splits.get((name, scope.generation(name)))
+                if count is not None and node.slice.value >= count:
+                    self.emit(
+                        "prng-split-overflow", node.lineno,
+                        f"{name}[{node.slice.value}] indexes past "
+                        f"jax.random.split(..., {count}) — out of range")
+
+    def _consume(self, call: ast.Call, scope: _FunctionScope):
+        ke = _key_expr(call)
+        if ke is None:
+            return
+        name, idx = ke
+        slot = (name, scope.generation(name), idx)
+        prev = scope.strong.get(slot)
+        if prev is not None:
+            prev_line, prev_fn = prev
+            self.emit(
+                "prng-key-reuse", call.lineno,
+                f"PRNG key {_fmt_key(name, idx)} already consumed by "
+                f"jax.random.{prev_fn} at line {prev_line}; sampling from "
+                f"it again correlates the two streams (split or fold_in a "
+                f"fresh key instead)")
+        else:
+            fn = _is_random_call(call)
+            scope.strong[slot] = (call.lineno, fn)
+
+    def _prng_assign(self, stmt: ast.Assign, scope: _FunctionScope):
+        # record split counts BEFORE bumping target generations: the count
+        # belongs to the freshly bound name
+        split_count = None
+        v = stmt.value
+        if isinstance(v, ast.Call) and _is_random_call(v) == "split":
+            if len(v.args) >= 2 and isinstance(v.args[1], ast.Constant) \
+                    and isinstance(v.args[1].value, int):
+                split_count = v.args[1].value
+            for kw in v.keywords:
+                if kw.arg == "num" and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, int):
+                    split_count = kw.value.value
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                scope.bump(t.id)
+                if split_count is not None:
+                    scope.splits[(t.id, scope.generation(t.id))] = split_count
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for e in t.elts:
+                    if isinstance(e, ast.Name):
+                        scope.bump(e.id)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def lint_source(path: str, source: str) -> List[Finding]:
+    """Lint one file's source text (path is used for reporting only)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="tracer-python-branch", severity="error",
+                        path=path, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}")]
+    linter = _Linter(path, source)
+    linter.scan_module(tree)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_file(path: str, *, rel_to: Optional[str] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    rel = os.path.relpath(path, rel_to) if rel_to else path
+    return lint_source(rel, src)
+
+
+def lint_paths(paths: Sequence[str], *,
+               rel_to: Optional[str] = None) -> List[Finding]:
+    """Lint every .py file under each path (file or directory)."""
+    out: List[Finding] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.extend(lint_file(p, rel_to=rel_to))
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs if d != "__pycache__"]
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.extend(lint_file(os.path.join(root, f),
+                                         rel_to=rel_to))
+    return out
+
+
+def hygiene_findings(repo_root: str) -> List[Finding]:
+    """tracked-bytecode: committed .pyc/.pyo/__pycache__ entries (the old
+    ci.sh stage-0 inline check, now a first-class rule)."""
+    try:
+        res = subprocess.run(
+            ["git", "ls-files", "*.pyc", "*.pyo", "**/__pycache__/*"],
+            cwd=repo_root, capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError):
+        return []          # not a git checkout — nothing to check
+    tracked = [ln for ln in res.stdout.splitlines() if ln.strip()]
+    return [Finding(rule="tracked-bytecode", severity="error", path=p, line=0,
+                    message="bytecode file is tracked by git; "
+                            "`git rm --cached` it (see .gitignore)")
+            for p in tracked]

@@ -652,6 +652,66 @@ def make_local_step(model, dcfg: DistConfig, mesh: Mesh):
     return local_fn
 
 
+def state_shardings(mesh: Mesh, state, pshard, dcfg: Optional[DistConfig]):
+    """Shardings for TrainState: params per policy; h gets a leading worker
+    dim over worker_axes; hbar like params; opt_state like params.
+
+    These are exactly the shardings ``make_train_step``'s step emits, so a
+    state placed on them round-trips through the step without a re-layout —
+    and without the silent second XLA compile that a SingleDeviceSharding
+    initial state costs (the jaxpr is cached but the executable is keyed on
+    arg shardings; the trace audit pins this to one compile).
+
+    Bucketed wire: the artemis leaves are single stacked arrays, not
+    per-param trees — h/e/acc carry a leading worker dim ([W, B, R, C] or a
+    [W] stub) sharded over the worker axes, hbar ([B, R, C]) is replicated
+    (every worker applies the identical summed update)."""
+    rep = NamedSharding(mesh, P())
+    if dcfg is not None and dcfg.bucketed:
+        waxes = dcfg.worker_axes
+        wsh = NamedSharding(mesh, P(waxes))
+        opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
+            if state.opt_state != () else ()
+        return TrainState(
+            params=pshard, opt_state=opt_sh,
+            artemis=ArtemisDistState(
+                h=jax.tree.map(lambda _: wsh, state.artemis.h),
+                hbar=jax.tree.map(lambda _: rep, state.artemis.hbar),
+                e=jax.tree.map(lambda _: wsh, state.artemis.e),
+                acc=jax.tree.map(lambda _: wsh, state.artemis.acc),
+                prev_active=wsh,
+                step=rep),
+            step=rep)
+
+    def shift(ns):
+        spec = ns.spec
+        waxes = dcfg.worker_axes if dcfg else ()
+        return NamedSharding(mesh, P(waxes, *spec))
+
+    def worker_tree(struct_tree, full: bool):
+        if full:
+            return jax.tree.map(shift, pshard)
+        return jax.tree.map(lambda _: rep, struct_tree)
+
+    if dcfg is not None and dcfg.memory:
+        h_sh = worker_tree(state.artemis.h, True)
+        hbar_sh = jax.tree.map(lambda ns: ns, pshard)
+    else:
+        h_sh = worker_tree(state.artemis.h, False)
+        hbar_sh = jax.tree.map(lambda _: rep, state.artemis.hbar)
+    e_sh = worker_tree(state.artemis.e, dcfg is not None and dcfg.use_ef)
+    acc_sh = worker_tree(state.artemis.acc,
+                         dcfg is not None and dcfg.local_steps > 1)
+    opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
+        if state.opt_state != () else ()
+    waxes_sh = NamedSharding(mesh, P(dcfg.worker_axes if dcfg else ()))
+    return TrainState(
+        params=pshard, opt_state=opt_sh,
+        artemis=ArtemisDistState(h=h_sh, hbar=hbar_sh, e=e_sh, acc=acc_sh,
+                                 prev_active=waxes_sh, step=rep),
+        step=rep)
+
+
 def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
                     grad_specs: Optional[PyTree] = None):
     """Build (init_state_fn, step_fn).
@@ -670,10 +730,24 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
         for a in dcfg.worker_axes:
             n_workers *= sizes[a]
 
+    def _param_shard(leaf):
+        # keep a caller-placed NamedSharding on this mesh; everything else
+        # (fresh single-device init, abstract leaves) replicates
+        sh = getattr(leaf, "sharding", None)
+        if isinstance(sh, NamedSharding) and sh.mesh == mesh:
+            return sh
+        return NamedSharding(mesh, P())
+
     def init_state(params) -> TrainState:
         opt_state = optimizer.init(params)
         art = init_dist_state(dcfg, params, n_workers)
-        return TrainState(params, opt_state, art, jnp.zeros((), jnp.int32))
+        state = TrainState(params, opt_state, art, jnp.zeros((), jnp.int32))
+        # place the fresh state exactly where the step's outputs will live:
+        # a SingleDeviceSharding state makes the SECOND step recompile the
+        # whole program for the post-step NamedShardings
+        pshard = jax.tree.map(_param_shard, params)
+        return jax.device_put(state, state_shardings(mesh, state, pshard,
+                                                     dcfg))
 
     k_local = dcfg.local_steps if dcfg else 1
 

@@ -119,8 +119,11 @@ def make_logistic_problem(key, n_workers=20, n_per=200, d=2,
     k1, k2, k3 = jax.random.split(key, 3)
     w1 = jnp.full((d,), 10.0).at[1:].set(10.0)
     w2 = jnp.full((d,), 10.0).at[1:].set(-10.0)
+    # the two worker populations deliberately share ONE uniform draw so their
+    # covariances are exact mirrors (cov1 + cov2 == 3); a fresh key here
+    # would decouple them and shift the golden logistic problems
     cov1 = 1.0 + 0.5 * jax.random.uniform(k3, (d,))
-    cov2 = 2.0 - 0.5 * jax.random.uniform(k3, (d,))
+    cov2 = 2.0 - 0.5 * jax.random.uniform(k3, (d,))  # repro-lint: allow=prng-key-reuse
     Xs, Ys = [], []
     keys = jax.random.split(k1, n_workers)
     for i in range(n_workers):

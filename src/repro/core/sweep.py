@@ -43,6 +43,7 @@ calls with new gammas/seeds re-trace zero times.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import warnings
@@ -272,8 +273,8 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
             return jax.lax.scan(outer, carry, es)
 
         def sweep_seg(carry, vis, gammas, keys, w_star, e0):
-            global _TRACE_COUNT
-            _TRACE_COUNT += 1                  # runs only while tracing
+            global _TRACE_COUNT                # repro-lint: allow=jit-mutable-global
+            _TRACE_COUNT += 1                  # trace counter, trace-time only
             return jax.vmap(cell_seg, in_axes=(0, 0, 0, 0, None, None))(
                 carry, vis, gammas, keys, w_star, e0)
 
@@ -287,8 +288,8 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         return jax.lax.scan(outer, init_carry(w0, st0), jnp.arange(n_evals))
 
     def sweep(w0b, st0b, vis, gammas, keys, w_star):
-        global _TRACE_COUNT
-        _TRACE_COUNT += 1                      # runs only while tracing
+        global _TRACE_COUNT                    # repro-lint: allow=jit-mutable-global
+        _TRACE_COUNT += 1                      # trace counter, trace-time only
         # NOTE: vmap of lax.switch over a batched index evaluates every
         # branch and selects, so each cell pays V x the round arithmetic.
         # That is the deliberate trade for compiling the whole grid ONCE:
@@ -305,6 +306,84 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
     # come off the exact same division in both modes — fusing the divide
     # into the cell program moves them by an ulp vs the segmented run.
     return jax.jit(sweep, donate_argnums=(0, 1)), extract
+
+
+def _prepare_grid(problem: Problem, cfgs, gammas, seeds, w0, w_star):
+    """Flatten the {V}x{G}x{S} grid into the batched arguments the compiled
+    sweep consumes (variant-major, then gamma, then seed — C-order).
+
+    Shared by ``run_sweep`` (execution) and ``lower_sweep`` (AOT analysis):
+    both must see byte-identical argument shapes or the executable cache
+    splits."""
+    d = problem.dim
+    gammas = jnp.asarray(gammas, jnp.float32).reshape(-1)
+    seeds = np.asarray(seeds)
+    if seeds.ndim == 2 and seeds.shape[-1] == 2:     # explicit PRNG keys
+        cell_keys = jnp.asarray(seeds, jnp.uint32)
+    else:
+        cell_keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds.reshape(-1)))
+    V, G, S = len(cfgs), gammas.shape[0], cell_keys.shape[0]
+    C = V * G * S
+    vis = jnp.repeat(jnp.arange(V, dtype=jnp.int32), G * S)
+    gms = jnp.tile(jnp.repeat(gammas, S), V)
+    keys = jnp.tile(cell_keys, (V * G, 1))
+    w0 = jnp.zeros((d,)) if w0 is None else jnp.asarray(w0)
+    w0b = jnp.broadcast_to(w0, (C, d)).copy()            # donated below
+    st0 = art.init_state(cfgs[0])
+    st0b = jax.tree.map(lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(),
+                        st0)
+    ws = jnp.zeros((d,)) if w_star is None else jnp.asarray(w_star)
+    return (V, G, S, C), (w0b, st0b, vis, gms, keys, ws), w0
+
+
+def lower_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
+                gammas, seeds, iters: int, *, batch: int = 1,
+                eval_every: int = 1, full_batch: bool = False,
+                w0: Optional[jax.Array] = None,
+                w_star: Optional[jax.Array] = None,
+                gamma_decay: bool = False,
+                backend: Optional[str] = None):
+    """AOT-lower the grid program without executing it.
+
+    Returns ``jax.stages.Lowered`` for exactly the program ``run_sweep``
+    would run (same builder, same argument shapes).  ``repro.analysis``'s
+    HLO layer inspects its StableHLO for the donated-carry
+    ``tf.aliasing_output`` attributes and for host transfers; callers can
+    also ``.compile()`` it to warm the cache or read the optimized HLO."""
+    if iters % eval_every != 0:
+        raise ValueError(f"iters={iters} not divisible by "
+                         f"eval_every={eval_every}")
+    sweep_fn, _ = _build_sweep_fn(problem, cfgs, iters, eval_every, batch,
+                                  full_batch, gamma_decay, backend, None)
+    _, args, _ = _prepare_grid(problem, cfgs, gammas, seeds, w0, w_star)
+    return sweep_fn.lower(*args)
+
+
+@contextlib.contextmanager
+def _donation_guard():
+    """Surface real donation failures instead of blanket-suppressing them.
+
+    jax warns ``Some donated buffers were not usable`` when a donation
+    request is dropped.  On CPU backends without donation support that is
+    expected noise — but on TPU/GPU it means the in-place grid-carry update
+    (and its memory headroom) silently regressed, so it is promoted to an
+    error pointing at the static aliasing audit.  Unrelated warnings are
+    re-emitted untouched.  The positive guarantee (donated carries DO appear
+    in ``input_output_alias``) is checked statically by
+    ``repro.analysis.hlo_checks`` on ``lower_sweep``'s StableHLO."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        yield
+    for w in rec:
+        if "donated buffers" in str(w.message):
+            if jax.default_backend() in ("tpu", "gpu", "cuda", "rocm"):
+                raise RuntimeError(
+                    f"sweep carry donation was dropped on "
+                    f"{jax.default_backend()!r}: {w.message} — the grid no "
+                    f"longer updates in place; run `python -m repro.analysis`"
+                    f" (hlo-missing-donation) to locate the unaliased carry")
+            continue        # CPU: donation unsupported there, nothing lost
+        warnings.warn_explicit(w.message, w.category, w.filename, w.lineno)
 
 
 def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
@@ -384,15 +463,8 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                 f"checkpoint_every={checkpoint_every} must be a multiple of "
                 f"eval_every={eval_every} and divide iters={iters}")
         seg_evals = checkpoint_every // eval_every
-    d = problem.dim
-    gammas = jnp.asarray(gammas, jnp.float32).reshape(-1)
-    seeds = np.asarray(seeds)
-    if seeds.ndim == 2 and seeds.shape[-1] == 2:     # explicit PRNG keys
-        cell_keys = jnp.asarray(seeds, jnp.uint32)
-    else:
-        cell_keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds.reshape(-1)))
-    V, G, S = len(cfgs), gammas.shape[0], cell_keys.shape[0]
-    C = V * G * S
+    (V, G, S, C), (w0b, st0b, vis, gms, keys, ws), w0 = _prepare_grid(
+        problem, cfgs, gammas, seeds, w0, w_star)
 
     key = _static_key(problem, cfgs, iters, eval_every, batch, full_batch,
                       gamma_decay, backend, seg_evals)
@@ -406,17 +478,6 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         _COMPILED[key] = _COMPILED.pop(key)             # mark recently used
     fn = _COMPILED[key]
 
-    # flattened grid: variant-major, then gamma, then seed (C-order)
-    vis = jnp.repeat(jnp.arange(V, dtype=jnp.int32), G * S)
-    gms = jnp.tile(jnp.repeat(gammas, S), V)
-    keys = jnp.tile(cell_keys, (V * G, 1))
-
-    w0 = jnp.zeros((d,)) if w0 is None else jnp.asarray(w0)
-    w0b = jnp.broadcast_to(w0, (C, d)).copy()            # donated below
-    st0 = art.init_state(cfgs[0])
-    st0b = jax.tree.map(lambda x: jnp.broadcast_to(x, (C,) + x.shape).copy(), st0)
-    ws = jnp.zeros((d,)) if w_star is None else jnp.asarray(w_star)
-
     before = _TRACE_COUNT
     if seg_evals is not None:
         losses, bits, dists, w_fin, w_avg, w_tail, rb, gscale = \
@@ -426,9 +487,7 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                            w0, ws, C)
     else:
         sweep_fn, extract = fn
-        with warnings.catch_warnings():
-            # CPU has no donation support; the request still helps on TPU/GPU
-            warnings.filterwarnings("ignore", message="Some donated buffers")
+        with _donation_guard():
             carry, (losses, bits, dists) = jax.block_until_ready(
                 sweep_fn(w0b, st0b, vis, gms, keys, ws))
         w_fin, w_avg, w_tail, rb, gscale = extract(carry)

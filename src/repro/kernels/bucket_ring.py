@@ -54,7 +54,7 @@ def bucket_acc(acc: jax.Array, q: jax.Array, scales: jax.Array, *,
         return pl.pallas_call(
             _acc_kernel,
             out_shape=jax.ShapeDtypeStruct((b, r, c), jnp.float32),
-            interpret=True,
+            interpret=interpret,
         )(acc, q, scales)
     br = r if block_rows == 0 else block_rows
     assert r % br == 0, (q.shape, block_rows)

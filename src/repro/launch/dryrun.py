@@ -90,7 +90,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, dist_variant: str,
             init_state, step_fn = dist.make_train_step(model, opt, dcfg, mesh,
                                                        grad_specs=gspecs)
             state = jax.eval_shape(init_state, params)
-            sshard = _state_shardings(mesh, state, pshard, dcfg)
+            sshard = dist.state_shardings(mesh, state, pshard, dcfg)
             batch = configs.input_specs(cfg, shape, model)
             bshard = M.batch_shardings(mesh, batch)
             fn = jax.jit(step_fn, in_shardings=(sshard, bshard))
@@ -158,62 +158,6 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, dist_variant: str,
               f"coll={sum(coll.values()):.3e}B dominant={rl.dominant}")
         print("  memory_analysis:", rec["memory_analysis"])
     return rec
-
-
-def _state_shardings(mesh, state, pshard, dcfg):
-    """Shardings for TrainState: params per policy; h gets a leading worker
-    dim over worker_axes; hbar like params; opt_state like params.
-
-    Bucketed wire: the artemis leaves are single stacked arrays, not
-    per-param trees — h/e/acc carry a leading worker dim ([W, B, R, C] or a
-    [W] stub) sharded over the worker axes, hbar ([B, R, C]) is replicated
-    (every worker applies the identical summed update)."""
-    from repro.core.dist import ArtemisDistState, TrainState
-
-    rep = NamedSharding(mesh, P())
-    if dcfg is not None and dcfg.bucketed:
-        waxes = dcfg.worker_axes
-        wsh = NamedSharding(mesh, P(waxes))
-        opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
-            if state.opt_state != () else ()
-        return TrainState(
-            params=pshard, opt_state=opt_sh,
-            artemis=ArtemisDistState(
-                h=jax.tree.map(lambda _: wsh, state.artemis.h),
-                hbar=jax.tree.map(lambda _: rep, state.artemis.hbar),
-                e=jax.tree.map(lambda _: wsh, state.artemis.e),
-                acc=jax.tree.map(lambda _: wsh, state.artemis.acc),
-                prev_active=wsh,
-                step=rep),
-            step=rep)
-
-    def shift(ns):
-        spec = ns.spec
-        waxes = dcfg.worker_axes if dcfg else ()
-        return NamedSharding(mesh, P(waxes, *spec))
-
-    def worker_tree(struct_tree, full: bool):
-        if full:
-            return jax.tree.map(shift, pshard)
-        return jax.tree.map(lambda _: rep, struct_tree)
-
-    if dcfg is not None and dcfg.memory:
-        h_sh = worker_tree(state.artemis.h, True)
-        hbar_sh = jax.tree.map(lambda ns: ns, pshard)
-    else:
-        h_sh = worker_tree(state.artemis.h, False)
-        hbar_sh = jax.tree.map(lambda _: rep, state.artemis.hbar)
-    e_sh = worker_tree(state.artemis.e, dcfg is not None and dcfg.use_ef)
-    acc_sh = worker_tree(state.artemis.acc,
-                         dcfg is not None and dcfg.local_steps > 1)
-    opt_sh = jax.tree.map(lambda l: rep, state.opt_state) \
-        if state.opt_state != () else ()
-    waxes_sh = NamedSharding(mesh, P(dcfg.worker_axes if dcfg else ()))
-    return TrainState(
-        params=pshard, opt_state=opt_sh,
-        artemis=ArtemisDistState(h=h_sh, hbar=hbar_sh, e=e_sh, acc=acc_sh,
-                                 prev_active=waxes_sh, step=rep),
-        step=rep)
 
 
 def main():

@@ -178,7 +178,7 @@ class Model:
             params["layers"] = jax.tree.map(lambda *a: jnp.stack(a), *per)
         else:
             period = len(cfg.pattern)
-            gkeys = jax.random.split(ks[2], self.n_groups * period).reshape(
+            gkeys = jax.random.split(ks[6], self.n_groups * period).reshape(
                 self.n_groups, period, -1)
             groups = []
             for j, kind in enumerate(cfg.pattern):

@@ -1,0 +1,16 @@
+"""Seeded violation: hardcoded-interpret."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x):
+    return pl.pallas_call(
+        double_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,                       # pins interpret mode
+    )(x)

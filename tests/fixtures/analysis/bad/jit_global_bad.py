@@ -1,0 +1,17 @@
+"""Seeded violations: jit-mutable-global (global stmt + mutable closure)."""
+import jax
+
+_CALLS = 0
+_CACHE = {}
+
+
+@jax.jit
+def counted(x):
+    global _CALLS
+    _CALLS += 1                               # trace-time only
+    return x * 2
+
+
+@jax.jit
+def cached_scale(x):
+    return x * _CACHE.get("scale", 1.0)       # baked in at trace time

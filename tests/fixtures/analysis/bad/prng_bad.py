@@ -1,0 +1,20 @@
+"""Seeded violations: prng-key-reuse (twice) and prng-split-overflow."""
+import jax
+
+
+def reuse_whole_key(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))        # reuse of `key`
+    return a + b
+
+
+def reuse_split_slot(key):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[1], (4,))
+    y = jax.random.normal(ks[1], (4,))       # reuse of ks[1]
+    return x + y
+
+
+def overflow_split(key):
+    ks = jax.random.split(key, 3)
+    return jax.random.normal(ks[3], (4,))    # ks[3] past split(..., 3)

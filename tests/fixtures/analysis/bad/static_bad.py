@@ -1,0 +1,9 @@
+"""Seeded violation: static-unhashable-default."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=[0]):                 # unhashable static default
+    return x.sum(axis=tuple(dims))

@@ -1,0 +1,10 @@
+"""Seeded violation: tracer-python-branch."""
+import jax.numpy as jnp
+
+
+def branch_on_tracer(x):
+    if jnp.any(x > 0):                        # ConcretizationError under jit
+        return x * 2
+    while jnp.sum(x) < 1.0:                   # same, in a while test
+        x = x + 1
+    return x

@@ -1,0 +1,19 @@
+"""Clean twin of interpret_bad: interpret routed through the env-aware
+default (and plumbed as a value, never a literal)."""
+import jax
+from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+
+
+def double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return pl.pallas_call(
+        double_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

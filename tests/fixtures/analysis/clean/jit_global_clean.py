@@ -1,0 +1,17 @@
+"""Clean twin of jit_global_bad: state threaded through arguments; the
+module mutable is only touched outside jit."""
+import jax
+
+_CALLS = 0
+_CACHE = {}
+
+
+@jax.jit
+def pure_fn(x, scale):
+    return x * scale
+
+
+def record_call(x):
+    global _CALLS                             # not jit-wrapped: fine
+    _CALLS += 1
+    return pure_fn(x, _CACHE.get("scale", 1.0))

@@ -1,0 +1,31 @@
+"""Clean twin of prng_bad: every key consumed exactly once; fold_in side
+streams and branch-exclusive consumption are idiomatic, not reuse."""
+import jax
+
+
+def no_reuse(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    salted = jax.random.fold_in(k2, 7)       # weak consumption: fine
+    c = jax.random.normal(salted, (4,))
+    return a + b + c
+
+
+def branch_exclusive(key, flag):
+    if flag:
+        return jax.random.normal(key, (4,))
+    else:
+        return jax.random.uniform(key, (4,))  # other branch: not reuse
+
+
+def rebound_generation(key):
+    key, sub = jax.random.split(key)
+    x = jax.random.normal(sub, (4,))
+    key, sub = jax.random.split(key)          # fresh generation of `sub`
+    return x + jax.random.normal(sub, (4,))
+
+
+def in_range_split(key):
+    ks = jax.random.split(key, 3)
+    return jax.random.normal(ks[2], (4,))

@@ -1,0 +1,9 @@
+"""Clean twin of static_bad: hashable tuple default."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=(0,)):
+    return x.sum(axis=tuple(dims))

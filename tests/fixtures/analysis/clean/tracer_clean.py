@@ -1,0 +1,11 @@
+"""Clean twin of tracer_bad: lax control flow + dtype-metadata branches."""
+import jax.numpy as jnp
+
+
+def no_tracer_branch(x):
+    y = jnp.where(jnp.any(x > 0), x * 2, x)
+    if jnp.issubdtype(x.dtype, jnp.floating):  # metadata query: fine
+        y = y.astype(jnp.float32)
+    if x.ndim == 2:                            # python int: fine
+        y = y.sum(axis=0)
+    return y
