@@ -13,6 +13,9 @@
 #      BENCH_sweep.json — committed versions come from a non-fast run)
 #   4. fault matrix     (self-healing smoke: inject NaN blowups / huge
 #      finite blowups / wire bit-flips, assert scrubbing + sentinel recover)
+#   5. observability    (instrumented sweep smoke: schema-valid JSONL event
+#      log, Perfetto trace artifact, markdown dashboard, and the
+#      BENCH_history.jsonl append-only regression gate — repro.obs)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -33,4 +36,11 @@ python benchmarks/run.py --fast
 
 echo "=== stage 4: fault-matrix smoke ==="
 python benchmarks/fault_bench.py --matrix
+
+echo "=== stage 5: observability smoke + bench gate ==="
+# instrumented sweep: JSONL events + Perfetto trace + dashboard, then
+# validate the log and gate the appended metrics against the ledger window
+python -m repro.obs smoke -o /tmp/repro_obs_ci --ledger BENCH_history.jsonl
+python -m repro.obs validate /tmp/repro_obs_ci/events.jsonl
+python -m repro.obs bench-check BENCH_history.jsonl
 echo "CI OK"

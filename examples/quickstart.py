@@ -11,6 +11,7 @@ from repro.core import dist
 from repro.data.synthetic import TokenStream, TokenStreamConfig
 from repro.launch import mesh as M
 from repro.models.model import build_model
+from repro.obs import EventLog, span
 from repro.optim import adam
 
 
@@ -22,20 +23,29 @@ def main():
     # Artemis over the 'data' axis: uplink int8 ring + memory, zero-byte
     # downlink broadcast. With one device this degrades to plain compression
     # noise on the gradient — still exercises the full code path.
-    dcfg = dist.DistConfig(worker_axes=("data",), variant="artemis", s=4)
+    # telemetry=True attaches a psum'd `obs` dict to the step metrics
+    # (wire bytes on the ring, participation, scrub/blowup counts) at no
+    # cost to the math — the trajectory is bitwise identical either way.
+    dcfg = dist.DistConfig(worker_axes=("data",), variant="artemis", s=4,
+                           telemetry=True)
 
     init_state, step_fn = dist.make_train_step(model, adam(3e-3), dcfg, mesh)
     params = model.init(jax.random.PRNGKey(0))
     stream = TokenStream(TokenStreamConfig(vocab=cfg.vocab, seq_len=128, batch=8))
 
+    # repro.obs: console output through the schema-checked event sink
+    # (pass a path instead of None to also persist JSONL)
+    log = EventLog(None)
     with jax.set_mesh(mesh):
         state = init_state(params)
         jstep = jax.jit(step_fn)
         for i in range(50):
-            state, (loss, _) = jstep(state, stream.batch_at(i))
+            with span("quickstart/step"):
+                state, (loss, m) = jstep(state, stream.batch_at(i))
             if i % 10 == 0 or i == 49:
-                print(f"step {i:3d}  loss {float(loss):.4f}")
-    print("done — loss should have dropped by >1 nat.")
+                log.emit("train_step", step=i, loss=round(float(loss), 4),
+                         wall_s=0.0, wire_bytes=float(m["obs"]["wire_bytes"]))
+    log.emit("note", text="done — loss should have dropped by >1 nat.")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,13 @@ Rules (ids are stable — they key the baseline file and SARIF output):
                                   committed ``.pyc``/``.pyo``/``__pycache__``
                                   entries (moved here from the old ci.sh
                                   stage-0 inline check).
+  print-in-library       warning  a library module calls ``print(...)``:
+                                  human output belongs in a CLI entry point
+                                  (``__main__.py`` modules and
+                                  ``launch/report.py`` are exempt) or routed
+                                  through ``repro.obs.events.EventLog``
+                                  (``echo=True`` mirrors to the console).
+                                  Subprocess-protocol prints carry a pragma.
 
 Inline suppression: ``# repro-lint: allow=<rule>[,<rule>]`` on the flagged
 line or on the enclosing ``def`` line.
@@ -54,7 +61,13 @@ RULES = {
     "hardcoded-interpret": "warning",
     "static-unhashable-default": "error",
     "tracked-bytecode": "error",
+    "print-in-library": "warning",
 }
+
+# files where bare print() IS the interface: CLI entry modules and the
+# stdout-rendering report generator
+_PRINT_EXEMPT_BASENAMES = frozenset({"__main__.py"})
+_PRINT_EXEMPT_SUFFIXES = ("launch/report.py",)
 
 # jax.random functions that *strongly* consume their key argument: the key
 # must never reach two of these.
@@ -252,6 +265,7 @@ class _Linter(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call):
         self._check_interpret_kw(node)
+        self._check_print(node)
         self.generic_visit(node)
 
     # -- rule: tracer-python-branch ------------------------------------------
@@ -285,6 +299,21 @@ class _Linter(ast.NodeVisitor):
                     f"call passes interpret={kw.value.value} as a constant; "
                     f"route through kernels.default_interpret() so "
                     f"REPRO_INTERPRET / the backend choose the mode")
+
+    # -- rule: print-in-library ----------------------------------------------
+
+    def _check_print(self, call: ast.Call):
+        if not (isinstance(call.func, ast.Name) and call.func.id == "print"):
+            return
+        p = self.path.replace(os.sep, "/")
+        if os.path.basename(p) in _PRINT_EXEMPT_BASENAMES or \
+                p.endswith(_PRINT_EXEMPT_SUFFIXES):
+            return
+        self.emit(
+            "print-in-library", call.lineno,
+            "library module calls print(); route human output through "
+            "repro.obs.events.EventLog (echo=True mirrors to the console) "
+            "or move it into a __main__ CLI module")
 
     # -- rule: static-unhashable-default -------------------------------------
 

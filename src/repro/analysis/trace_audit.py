@@ -240,7 +240,7 @@ def _child_bucket_ring():
             state, _ = jstep(state, model.batch(jax.random.PRNGKey(i), n=16))
         jax.block_until_ready(state)
     for name, count in sorted(compile_counts(names).items()):
-        print(f"AUDIT {name}={count}")
+        print(f"AUDIT {name}={count}")  # repro-lint: allow=print-in-library (subprocess protocol)
 
 
 ENTRY_POINTS: Dict[str, Callable[[], List[Finding]]] = {
@@ -274,5 +274,5 @@ if __name__ == "__main__":
     else:
         fs = audit_entry_points(sys.argv[1:])
         for f in fs:
-            print(f.format())
+            print(f.format())  # repro-lint: allow=print-in-library (CLI entry)
         raise SystemExit(1 if fs else 0)

@@ -50,6 +50,7 @@ from repro.core import codec as wire
 from repro.core import faults as FLT
 from repro.kernels import bucket_ring as BK
 from repro.kernels import default_interpret
+from repro.obs import telemetry as obs_tel
 
 PyTree = Any
 
@@ -119,6 +120,15 @@ class DistConfig:
     codec_kwargs: Tuple[Tuple[str, Any], ...] = ()
     # --- fault injection + server defenses (core/faults.py, DESIGN.md §8) ---
     faults: Optional[FLT.FaultConfig] = None
+    # --- observability (repro.obs, DESIGN.md §11) ---
+    # STATIC gate: False builds the byte-identical legacy step.  True makes
+    # the aggregates return a third `obs` dict (repro.obs.telemetry
+    # MESH_METRICS: physical wire bytes/step reconciled against the
+    # launch/roofline models, participation, scrub/blowup counts) which the
+    # train step psums over workers and attaches to the step metrics under
+    # "obs".  All values are computed from quantities the step already has —
+    # no extra collectives beyond the psums of four scalars.
+    telemetry: bool = False
 
     def __post_init__(self):
         if self.wire not in WIRES:
@@ -201,6 +211,16 @@ def _codec_alpha(cfg: "DistConfig", rows) -> float:
     return float(1.0 / (2.0 * (om + 1.0)))
 
 
+def _payload_nbytes(payload) -> float:
+    """Byte size of one encoded wire payload.  Shapes are static at trace
+    time, so this is a Python constant — the telemetry wire-byte counter
+    costs nothing in the compiled step.  Equals the codec's declared
+    ``wire_bytes`` split summed over dtypes (the encoders ship exactly the
+    arrays they declare; the HLO wire guard pins that equivalence)."""
+    return float(sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(payload)))
+
+
 # ---------------------------------------------------------------------------
 # bucketed ring transports (run INSIDE the worker-manual shard_map)
 # ---------------------------------------------------------------------------
@@ -252,8 +272,11 @@ def bucket_ring_reduce(codec: wire.Codec, payload: wire.WirePayload,
 
     def hop(carry, _):
         pc, a = carry
-        pn = jax.tree.map(lambda l: jax.lax.ppermute(l, axes, perm), pc)
-        a = _payload_acc(codec, a, pc, itp)
+        # named_scope: metadata-only annotation so the hop's ppermute +
+        # dequant-accumulate are findable on the profiler timeline
+        with jax.named_scope("ring_hop"):
+            pn = jax.tree.map(lambda l: jax.lax.ppermute(l, axes, perm), pc)
+            a = _payload_acc(codec, a, pc, itp)
         return (pn, a), None
 
     (pl, acc), _ = jax.lax.scan(hop, (payload, acc), None, length=n - 1)
@@ -387,11 +410,17 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
     p = cfg.p_participation
     mdt = jnp.dtype(cfg.memory_dtype)
 
+    obs_blow = jnp.zeros((), jnp.float32)
+    obs_scrub = jnp.zeros((), jnp.float32)
+    obs_bytes = 0.0
+
     g32 = gbuckets.astype(jnp.float32)
     if fc.blowup_rate > 0.0:
         hit = jax.random.bernoulli(jax.random.fold_in(flt_key, 2),
                                    fc.blowup_rate, ())
         g32 = jnp.where(hit, jnp.float32(fc.blowup_value), g32)
+        if cfg.telemetry:
+            obs_blow = hit.astype(jnp.float32)
     if fc.scrub:
         # non-finite local gradient => worker masked inactive BEFORE any
         # arithmetic (0 * NaN is NaN, so the rows are zeroed too)
@@ -421,16 +450,24 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
             valid = jax.vmap(wc.validate)(enc)         # [B]
             ok = active * valid.reshape(-1, 1, 1)      # [B,1,1] broadcast
             enc = FLT.scrub_payload(enc, valid)
+            if cfg.telemetry:
+                obs_scrub = valid.shape[0] - jnp.sum(valid)
         if cfg.reduce_impl == "psum":
             dhat_sum = jax.lax.psum(payload_decode(wc, enc), axes)
+            # all-reduce proxy: result bytes ~ bytes sent per device on a
+            # ring (the same convention launch/roofline uses)
+            obs_bytes = 4.0 * float(np.prod(g32.shape))
         elif cfg.reduce_impl == "sequential":
             dhat_sum = bucket_ring_reduce_sequential(wc, enc, axes, n)
+            obs_bytes = (n - 1) * _payload_nbytes(enc)
         else:
             dhat_sum = bucket_ring_reduce(wc, enc, axes, n)
+            obs_bytes = (n - 1) * _payload_nbytes(enc)
         dhat_i = payload_decode(wc, enc)
     else:
         dhat_i = delta * active
         dhat_sum = jax.lax.psum(dhat_i, axes)
+        obs_bytes = 4.0 * float(np.prod(g32.shape))
 
     if cfg.use_ef:
         e_new = (ok * (delta - dhat_i) + (1 - ok) * e_buf)[None]
@@ -450,7 +487,13 @@ def artemis_aggregate_bucketed(cfg: DistConfig, state: ArtemisDistState,
 
     new_state = ArtemisDistState(h_new, hbar_new, e_new, state.acc,
                                  jnp.reshape(part, (1,)), state.step + 1)
-    return ghat, new_state
+    if not cfg.telemetry:
+        return ghat, new_state
+    obs = {"wire_bytes": jnp.float32(obs_bytes),
+           "mesh_active": jnp.reshape(active, ()).astype(jnp.float32),
+           "mesh_scrubbed": obs_scrub.astype(jnp.float32),
+           "mesh_blowup_hits": obs_blow}
+    return ghat, new_state, obs
 
 
 def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
@@ -502,6 +545,11 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
             x, P(*(t + (None,) * (x.ndim - len(t)))))
 
     mdt = jnp.dtype(cfg.memory_dtype)
+    obs_blow = jnp.zeros((), jnp.float32)
+    if cfg.telemetry and fc.blowup_rate > 0.0:
+        obs_blow = blow_hit.astype(jnp.float32)
+    obs_scrub = jnp.zeros((), jnp.float32)
+    obs_bytes = 0.0
     out_agg, out_h, out_hbar, out_e = [], [], [], []
     for i, g in enumerate(leaves):
         g32 = g.astype(jnp.float32)
@@ -534,6 +582,8 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
                 valid = wcl.validate(p_l)
                 ok_l = act_l * valid
                 p_l = FLT.scrub_payload(p_l, valid)
+                if cfg.telemetry:
+                    obs_scrub = obs_scrub + (1.0 - valid)
             if "levels" in p_l.data:
                 # levels keep the leaf's auto-axis sharding; scales have the
                 # last dim collapsed (other codecs ship 1-D index/value
@@ -553,9 +603,11 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
                 dhat_sum = dhat_sum + wcl.decode(pr)
             dhat_sum = _pin(dhat_sum, spec_l[i])
             dhat_i = wcl.decode(p_l)
+            obs_bytes += (n - 1) * _payload_nbytes(p_l)
         else:
             dhat_i = delta * act_l
             dhat_sum = jax.lax.psum(dhat_i, axes)
+            obs_bytes += 4.0 * float(np.prod(g.shape) if g.ndim else 1)
         if cfg.use_ef:
             # EF accumulates what compression lost (Dore-style)
             out_e.append((ok_l * (delta - dhat_i)
@@ -584,7 +636,13 @@ def artemis_aggregate(cfg: DistConfig, state: ArtemisDistState, grads: PyTree,
                                  jax.tree.unflatten(treedef, out_e),
                                  state.acc, jnp.reshape(part, (1,)),
                                  state.step + 1)
-    return agg, new_state
+    if not cfg.telemetry:
+        return agg, new_state
+    obs = {"wire_bytes": jnp.float32(obs_bytes),
+           "mesh_active": jnp.reshape(active, ()).astype(jnp.float32),
+           "mesh_scrubbed": obs_scrub.astype(jnp.float32),
+           "mesh_blowup_hits": obs_blow}
+    return agg, new_state, obs
 
 
 # ---------------------------------------------------------------------------
@@ -751,9 +809,12 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
 
     k_local = dcfg.local_steps if dcfg else 1
 
+    telem = dcfg is not None and dcfg.telemetry
+
     def sgd_core(params, opt_state, art, stepno, batch, wid):
         (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
             params, batch)
+        obs = None
         if dcfg is not None and dcfg.worker_axes and dcfg.bucketed:
             layout = dcfg.layout(grads)
             gb = bucketing.bucketize(layout, grads)
@@ -761,8 +822,9 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
                 # fold in the locally-accumulated gradients since last sync
                 gb = (art.acc[0] + gb) / k_local
                 art = art._replace(acc=jnp.zeros_like(art.acc))
-            agg_b, art = artemis_aggregate_bucketed(dcfg, art, gb, layout,
-                                                    n_workers, wid)
+            out = artemis_aggregate_bucketed(dcfg, art, gb, layout,
+                                             n_workers, wid)
+            (agg_b, art, obs) = out if telem else out + (None,)
             agg = bucketing.unbucketize(layout, agg_b, like=grads)
         else:
             if k_local > 1:
@@ -771,19 +833,20 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
                 art = art._replace(acc=jax.tree.map(
                     lambda a: jnp.zeros_like(a), art.acc))
             if dcfg is not None and dcfg.worker_axes:
-                agg, art = artemis_aggregate(dcfg, art, grads, n_workers, wid,
-                                             grad_specs)
+                out = artemis_aggregate(dcfg, art, grads, n_workers, wid,
+                                        grad_specs)
+                (agg, art, obs) = out if telem else out + (None,)
             else:
                 agg = grads
                 art = art._replace(step=art.step + 1)
         updates, opt_state = optimizer.update(agg, opt_state, stepno)
         params = jax.tree.map(lambda pp, u: (pp - u.astype(pp.dtype)).astype(pp.dtype),
                               params, updates)
-        return params, opt_state, art, loss, metrics
+        return params, opt_state, art, loss, metrics, obs
 
     if dcfg is None or not dcfg.worker_axes:
         def step_fn(state: TrainState, batch):
-            params, opt_state, art, loss, metrics = sgd_core(
+            params, opt_state, art, loss, metrics, _ = sgd_core(
                 state.params, state.opt_state, state.artemis, state.step,
                 batch, jnp.zeros((), jnp.int32))
             return (TrainState(params, opt_state, art, state.step + 1),
@@ -801,15 +864,25 @@ def make_train_step(model, optimizer, dcfg: Optional[DistConfig], mesh: Mesh,
         sspec = state_specs(dcfg, state)
         bspec = jax.tree.map(lambda _: P(waxes), batch)
         mspec = {"nll": P(), "aux": P()}
+        if telem:
+            # telemetry rides the metrics pytree; per-worker scalars are
+            # psum'd to fleet totals, so the out-spec is replicated too
+            mspec = {**mspec, "obs": {k: P() for k in obs_tel.MESH_METRICS}}
 
         def inner(st: TrainState, bt):
             wid = jnp.zeros((), jnp.int32)
             for a in waxes:
                 wid = wid + jax.lax.axis_index(a) * strides[a]
-            params, opt_state, art, loss, metrics = sgd_core(
+            params, opt_state, art, loss, metrics, obs = sgd_core(
                 st.params, st.opt_state, st.artemis, st.step, bt, wid)
             loss = jax.lax.pmean(loss, waxes)
             metrics = jax.tree.map(lambda m: jax.lax.pmean(m, waxes), metrics)
+            if telem:
+                # totals over the worker ring (bytes moved, workers active,
+                # payloads scrubbed, blowups injected this step)
+                metrics = {**metrics,
+                           "obs": jax.tree.map(
+                               lambda x: jax.lax.psum(x, waxes), obs)}
             return (TrainState(params, opt_state, art, st.step + 1),
                     (loss, metrics))
 

@@ -273,15 +273,29 @@ def scrub_payload(payload, valid: jax.Array):
     return jax.tree.map(one, payload)
 
 
+def blowup_mask(fc: FaultConfig, key: jax.Array, n: int) -> jax.Array:
+    """The per-worker blowup draw ([N] bool at rate ``blowup_rate``), split
+    out of :func:`inject_blowup` so telemetry can count hits off the SAME
+    Bernoulli sample that corrupts the gradients (same key, same draw —
+    counting is bitwise-invisible to the fault stream)."""
+    return jax.random.bernoulli(key, fc.blowup_rate, (n,))
+
+
+def apply_blowup(fc: FaultConfig, hit: jax.Array, grads: jax.Array
+                 ) -> jax.Array:
+    """Replace the masked per-worker gradients ([N, ...]; axis 0 = workers)
+    with ``blowup_value``."""
+    n = grads.shape[0]
+    hit = hit.reshape((n,) + (1,) * (grads.ndim - 1))
+    return jnp.where(hit, jnp.float32(fc.blowup_value).astype(grads.dtype),
+                     grads)
+
+
 def inject_blowup(fc: FaultConfig, key: jax.Array, grads: jax.Array,
                   ) -> jax.Array:
     """Replace whole per-worker gradients ([N, ...]; axis 0 = workers) with
     ``blowup_value`` at rate ``blowup_rate``."""
-    n = grads.shape[0]
-    hit = jax.random.bernoulli(key, fc.blowup_rate, (n,))
-    hit = hit.reshape((n,) + (1,) * (grads.ndim - 1))
-    return jnp.where(hit, jnp.float32(fc.blowup_value).astype(grads.dtype),
-                     grads)
+    return apply_blowup(fc, blowup_mask(fc, key, grads.shape[0]), grads)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,19 @@ sentinel at each eval point rolls the carry back to the last good snapshot
 with geometric gamma backoff, all in-trace.  A zero-fault config emits the
 byte-identical program (every fault path is statically gated).
 
+Telemetry (DESIGN.md §11): ``run_sweep(telemetry=True)`` threads the
+``repro.obs`` pure-pytree metrics carry through the scan — per-round
+compression-error norms, participation/fault/rollback counters, the
+Remark-3 bit ledger split, and the memory-drift ``mean_i ||h_i - grad
+F_i(w*)||`` sampled at each eval point — and returns them as
+``SweepResult.telemetry`` arrays on the eval grid.  The flag is STATIC:
+``telemetry=False`` builds the byte-identical pre-telemetry program (same
+trace, same compile count, bitwise-equal trajectories), and even when
+enabled the PRNG streams and update path are untouched, so trajectories
+match the untelemetered run bitwise.  No host callback ever runs inside
+the scan; ``repro.obs.events.record_sweep`` writes the JSONL event log
+from the returned arrays afterwards.
+
 Resumable sweeps: ``run_sweep(checkpoint_dir=...)`` splits the outer scan
 into ``checkpoint_every``-round segments through one compiled segment
 program, snapshotting the batched carry + eval series after each segment
@@ -58,6 +71,8 @@ from repro.core import compression as comp
 from repro.core import faults
 from repro.core.federated import Problem
 from repro.checkpoint import checkpointer
+from repro.obs import spans as obs_spans
+from repro.obs import telemetry as obs_tel
 
 # incremented inside the traced sweep body: visible side effect only while
 # tracing, so it counts XLA compilations of the grid program
@@ -89,13 +104,17 @@ class SweepResult:
     gamma_scale: np.ndarray     # [V, G, S]  final backoff multiplier on gamma
     eval_iters: np.ndarray      # [E] iteration index k of each eval point
     traces: int                 # compiles triggered by THIS call (0 if cached)
+    # telemetry=True only: {metric: [V, G, S, E]} ([V, G, S, E, B] for
+    # histograms), metric names from the repro.obs.telemetry catalogue
+    telemetry: Optional[dict] = None
 
     def cell(self, v: int, g: int, s: int):
         """(losses, bits, dists) series of one grid cell."""
         return self.losses[v, g, s], self.bits[v, g, s], self.dists[v, g, s]
 
 
-def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
+def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str],
+                  telemetry: bool = False):
     """One lax.switch branch: full round + unified bit metering for ``cfg``.
 
     All per-variant constants (compressor table entry, participation p,
@@ -117,19 +136,31 @@ def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
         part = faults.participation(fc, cfg.p, u_act, prev_act, k)
         part = part.astype(grads.dtype)
         active = part
+        strag_drops = blowup_hits = scrub_drops = 0.0
         if fc.straggler_rate > 0.0:
             # available but missed the round deadline: drops out of the round
             u_s = jax.random.uniform(jax.random.fold_in(k_flt, 1), (n,))
+            avail = active
             active = active * (u_s >= fc.straggler_rate).astype(active.dtype)
+            if telemetry:
+                strag_drops = jnp.sum(avail) - jnp.sum(active)
         if fc.blowup_rate > 0.0:
-            grads = faults.inject_blowup(fc, jax.random.fold_in(k_flt, 2),
-                                         grads)
+            # the mask/apply split lets telemetry count hits off the SAME
+            # Bernoulli draw — the fault stream is untouched either way
+            hit = faults.blowup_mask(fc, jax.random.fold_in(k_flt, 2),
+                                     grads.shape[0])
+            grads = faults.apply_blowup(fc, hit, grads)
+            if telemetry:
+                blowup_hits = jnp.sum(hit.astype(jnp.float32))
         if fc.scrub:
             # non-finite gradient => worker masked inactive BEFORE any
             # arithmetic (0 * NaN is NaN, so zero the rows too)
             finite = jnp.all(jnp.isfinite(grads), axis=-1).astype(active.dtype)
+            pre_scrub = active
             active = active * finite
             grads = faults.nan_to_zero(grads)
+            if telemetry:
+                scrub_drops = jnp.sum(pre_scrub) - jnp.sum(active)
         omega, state, stats = art.artemis_round(cfg, state, grads, k_art,
                                                 active, backend=backend)
         missed = k - last_part                   # rounds since last download
@@ -137,15 +168,27 @@ def _round_branch(cfg: art.ArtemisConfig, backend: Optional[str]):
         catch = jnp.sum(active * catch)
         last_part = jnp.where(active > 0, k, last_part).astype(jnp.int32)
         bits = stats["uplink_bits"] + catch
-        return omega, state, last_part, bits, part
+        if not telemetry:
+            return omega, state, last_part, bits, part
+        tel = obs_tel.sweep_round(
+            avail=jnp.sum(part), active=jnp.sum(active),
+            straggler_drops=strag_drops, blowup_hits=blowup_hits,
+            entry_scrub_drops=scrub_drops,
+            wire_scrubbed=stats["wire_scrubbed"],
+            uplink_bits=stats["uplink_bits"],
+            dwnlink_bits=stats["dwnlink_bits"], catchup_bits=catch,
+            err_up=stats["compress_err_up"],
+            err_dwn=stats["compress_err_dwn"],
+            ghat_norm=stats["ghat_norm"])
+        return omega, state, last_part, bits, part, tel
 
     return branch
 
 
 def _static_key(problem: Problem, cfgs, iters, eval_every, batch, full_batch,
-                gamma_decay, backend, seg_evals) -> Tuple:
+                gamma_decay, backend, seg_evals, telemetry) -> Tuple:
     return (id(problem), tuple(repr(c) for c in cfgs), iters, eval_every,
-            batch, full_batch, gamma_decay, backend, seg_evals)
+            batch, full_batch, gamma_decay, backend, seg_evals, telemetry)
 
 
 def _sweep_fingerprint(problem: Problem, cfgs, iters, eval_every, batch,
@@ -164,14 +207,18 @@ def _sweep_fingerprint(problem: Problem, cfgs, iters, eval_every, batch,
 def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                     iters: int, eval_every: int, batch: int, full_batch: bool,
                     gamma_decay: bool, backend: Optional[str],
-                    seg_evals: Optional[int] = None):
+                    seg_evals: Optional[int] = None,
+                    telemetry: bool = False):
     """seg_evals=None: one donated whole-run program (the default).
     seg_evals=k: a resumable segment program over k eval strides; returns
-    (seg_fn, init_fn, extract_fn)."""
+    (seg_fn, init_fn, extract_fn).
+    telemetry=True appends the repro.obs metrics accumulator as the LAST
+    carry element and emits its per-eval reading as a 4th scan output —
+    False builds the byte-identical legacy program (static gate)."""
     n, d = problem.n_workers, problem.dim
     n_per = problem.X.shape[1]
     n_evals = iters // eval_every
-    branches = tuple(_round_branch(cfg, backend) for cfg in cfgs)
+    branches = tuple(_round_branch(cfg, backend, telemetry) for cfg in cfgs)
     # any cell with a sentinel grows the carry by (gamma scale, good
     # snapshot, rollback count); cells without one keep thresh=0 => never bad
     any_rollback = any(faults.of(c.faults).rollback for c in cfgs)
@@ -184,16 +231,23 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         base = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
                 -jnp.ones((n,), jnp.int32), jnp.zeros((), jnp.float32),
                 jnp.zeros((n,), jnp.float32))
-        if not any_rollback:
-            return base
-        good0 = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
-                 jnp.zeros((n,), jnp.float32), problem.global_loss(w0))
-        return base + (jnp.ones(()), good0, jnp.zeros((), jnp.int32))
+        if any_rollback:
+            good0 = (w0, st0, jnp.zeros_like(w0), jnp.zeros_like(w0),
+                     jnp.zeros((n,), jnp.float32), problem.global_loss(w0))
+            base = base + (jnp.ones(()), good0, jnp.zeros((), jnp.int32))
+        if telemetry:
+            base = base + (obs_tel.sweep_zeros(),)
+        return base
 
     def make_outer(vi, gamma, key, w_star):
         """The eval-stride scan body of one grid cell."""
+        # memory-drift reference grad F_i(w*): hoisted out of the scan —
+        # computed once per cell, only when telemetry asks for it
+        g_star = problem.full_grad(w_star) if telemetry else None
 
         def micro(carry, k):
+            if telemetry:
+                carry, tel_acc = carry[:-1], carry[-1]
             if any_rollback:
                 (w, st, wsum, wtail, last_part, bits, prev_act,
                  gscale, good, rb) = carry
@@ -209,9 +263,14 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                 idx = jax.random.randint(k_idx, (n, batch), 0, n_per)
                 grads = problem.worker_grad(w, idx)
             u_act = jax.random.uniform(k_act, (n,))
-            omega, st, last_part, round_bits, prev_act = jax.lax.switch(
+            sw = jax.lax.switch(
                 vi, branches, st, grads, u_act, k_art, last_part, k,
                 prev_act, k_flt)
+            if telemetry:
+                omega, st, last_part, round_bits, prev_act, tel = sw
+                tel_acc = obs_tel.sweep_accumulate(tel_acc, tel)
+            else:
+                omega, st, last_part, round_bits, prev_act = sw
             g = gamma / jnp.sqrt(k + 1.0) if gamma_decay else gamma
             if any_rollback:
                 g = g * gscale               # exact no-op while gscale == 1
@@ -220,21 +279,40 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
             base = (w, st, wsum + w, wtail, last_part, bits + round_bits,
                     prev_act)
             if any_rollback:
-                return base + (gscale, good, rb), None
+                base = base + (gscale, good, rb)
+            if telemetry:
+                base = base + (tel_acc,)
             return base, None
 
         if any_rollback:
             thr = jnp.asarray(sent_by_v)[vi]
             bo = jnp.asarray(back_by_v)[vi]
 
+        def emit_and_pack(tel_acc, st, rb, loss, bits, dist):
+            """Eval-point telemetry reading (post rollback selection)."""
+            emit = obs_tel.sweep_emit(
+                tel_acc, eval_every,
+                mem_drift=jnp.mean(jnp.linalg.norm(st.h - g_star, axis=-1)),
+                e_norm=jnp.mean(jnp.linalg.norm(st.e, axis=-1)),
+                rollbacks=rb)
+            return obs_tel.sweep_reset_stride(tel_acc), (loss, bits, dist,
+                                                         emit)
+
         def outer(carry, e):
             ks = e * eval_every + jnp.arange(eval_every)
             carry, _ = jax.lax.scan(micro, carry, ks)
+            if telemetry:
+                carry, tel_acc = carry[:-1], carry[-1]
             if not any_rollback:
-                w, _, _, _, _, bits, _ = carry
+                w, st, _, _, _, bits, _ = carry
                 loss = problem.global_loss(w)
                 dist = jnp.linalg.norm(w - w_star)
-                return carry, (loss, bits, dist)
+                if not telemetry:
+                    return carry, (loss, bits, dist)
+                tel_acc, out = emit_and_pack(tel_acc, st,
+                                             jnp.zeros((), jnp.int32),
+                                             loss, bits, dist)
+                return carry + (tel_acc,), out
             (w, st, wsum, wtail, last_part, bits, prev_act,
              gscale, good, rb) = carry
             loss = problem.global_loss(w)
@@ -251,12 +329,17 @@ def _build_sweep_fn(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
             dist = jnp.linalg.norm(w - w_star)
             carry = (w, st, wsum, wtail, last_part, bits, prev_act,
                      gscale, good, rb)
-            return carry, (loss, bits, dist)
+            if not telemetry:
+                return carry, (loss, bits, dist)
+            tel_acc, out = emit_and_pack(tel_acc, st, rb, loss, bits, dist)
+            return carry + (tel_acc,), out
 
         return outer
 
     def extract(carry):
         """Final per-cell results from a (possibly batched) carry."""
+        if telemetry:
+            carry = carry[:-1]
         if any_rollback:
             w, _, wsum, wtail, _, _, _, gscale, _, rb = carry
         else:
@@ -342,7 +425,8 @@ def lower_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                 w0: Optional[jax.Array] = None,
                 w_star: Optional[jax.Array] = None,
                 gamma_decay: bool = False,
-                backend: Optional[str] = None):
+                backend: Optional[str] = None,
+                telemetry: bool = False):
     """AOT-lower the grid program without executing it.
 
     Returns ``jax.stages.Lowered`` for exactly the program ``run_sweep``
@@ -354,7 +438,8 @@ def lower_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         raise ValueError(f"iters={iters} not divisible by "
                          f"eval_every={eval_every}")
     sweep_fn, _ = _build_sweep_fn(problem, cfgs, iters, eval_every, batch,
-                                  full_batch, gamma_decay, backend, None)
+                                  full_batch, gamma_decay, backend, None,
+                                  telemetry)
     _, args, _ = _prepare_grid(problem, cfgs, gammas, seeds, w0, w_star)
     return sweep_fn.lower(*args)
 
@@ -396,7 +481,8 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
               group_by_variant: bool = False,
               checkpoint_dir: Optional[str] = None,
               checkpoint_every: Optional[int] = None,
-              resume: bool = False) -> SweepResult:
+              resume: bool = False,
+              telemetry: bool = False) -> SweepResult:
     """Run the full {cfgs} x {gammas} x {seeds} grid in one compiled call.
 
     Args:
@@ -425,9 +511,20 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
       resume: restart from the latest snapshot in ``checkpoint_dir`` if one
         exists (validated against a sweep fingerprint; a foreign checkpoint
         raises ValueError).  No snapshot -> fresh start.
+      telemetry: thread the repro.obs in-trace metrics carry through the
+        scan and return per-eval-point readings as ``SweepResult.telemetry``
+        (DESIGN.md §11).  Static gate: False is the byte-identical legacy
+        program; True leaves trajectories bitwise unchanged (the PRNG
+        streams and update path are untouched).  Not supported together
+        with ``checkpoint_dir`` (the snapshot format pins the carry).
 
     Returns a SweepResult with [V, G, S, ...] arrays.
     """
+    if telemetry and checkpoint_dir is not None:
+        raise ValueError("telemetry=True is not supported with "
+                         "checkpoint_dir (the checkpoint carry format does "
+                         "not include the metrics accumulator); run the "
+                         "instrumented sweep unsegmented")
     if checkpoint_dir is not None and group_by_variant:
         raise ValueError("checkpointing is not supported with "
                          "group_by_variant=True (V independent sub-sweeps "
@@ -440,14 +537,19 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         parts = [run_sweep(problem, [cfg], gammas, seeds, iters, batch=batch,
                            eval_every=eval_every, full_batch=full_batch,
                            w0=w0, w_star=w_star, gamma_decay=gamma_decay,
-                           backend=backend)
+                           backend=backend, telemetry=telemetry)
                  for cfg in cfgs]
         arr = {f.name: np.concatenate([getattr(p, f.name) for p in parts],
                                       axis=0)
                for f in dataclasses.fields(SweepResult)
-               if f.name not in ("eval_iters", "traces")}
+               if f.name not in ("eval_iters", "traces", "telemetry")}
+        tel = None
+        if telemetry:
+            tel = {k: np.concatenate([p.telemetry[k] for p in parts], axis=0)
+                   for k in parts[0].telemetry}
         return SweepResult(eval_iters=parts[0].eval_iters,
-                           traces=sum(p.traces for p in parts), **arr)
+                           traces=sum(p.traces for p in parts),
+                           telemetry=tel, **arr)
     if iters % eval_every != 0:
         raise ValueError(f"iters={iters} not divisible by eval_every={eval_every}")
     for cfg in cfgs:
@@ -467,13 +569,13 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
         problem, cfgs, gammas, seeds, w0, w_star)
 
     key = _static_key(problem, cfgs, iters, eval_every, batch, full_batch,
-                      gamma_decay, backend, seg_evals)
+                      gamma_decay, backend, seg_evals, telemetry)
     if key not in _COMPILED:
         while len(_COMPILED) >= _COMPILED_MAX:          # bounded LRU
             _COMPILED.pop(next(iter(_COMPILED)))
         _COMPILED[key] = _build_sweep_fn(
             problem, cfgs, iters, eval_every, batch, full_batch, gamma_decay,
-            backend, seg_evals)
+            backend, seg_evals, telemetry)
     else:
         _COMPILED[key] = _COMPILED.pop(key)             # mark recently used
     fn = _COMPILED[key]
@@ -487,16 +589,30 @@ def run_sweep(problem: Problem, cfgs: Sequence[art.ArtemisConfig],
                            w0, ws, C)
     else:
         sweep_fn, extract = fn
-        with _donation_guard():
-            carry, (losses, bits, dists) = jax.block_until_ready(
+        # a cold call traces+compiles inside this span, a warm one times
+        # pure execution; res.traces says which it was, so the span ledger
+        # (or any installed event sink) yields the compile/execute split
+        with _donation_guard(), obs_spans.span("sweep/execute",
+                                               cells=int(C)):
+            carry, ys = jax.block_until_ready(
                 sweep_fn(w0b, st0b, vis, gms, keys, ws))
+        if telemetry:
+            losses, bits, dists, tel_out = ys
+        else:
+            losses, bits, dists = ys
         w_fin, w_avg, w_tail, rb, gscale = extract(carry)
 
     def _grid(x):
         x = np.asarray(x)
         return x.reshape((V, G, S) + x.shape[1:])
 
+    tel = None
+    if telemetry:
+        # [C, E(, B)] per metric -> [V, G, S, E(, B)] host arrays
+        tel = {k: _grid(v) for k, v in tel_out.items()}
+
     return SweepResult(
+        telemetry=tel,
         losses=_grid(losses),
         bits=_grid(bits),
         dists=_grid(dists),
@@ -541,9 +657,10 @@ def _run_segmented(fn, problem, cfgs, iters, eval_every, batch, full_batch,
         e_done = int(extra["e_done"])
     for si in range(e_done // seg_evals, n_segs):
         e0 = si * seg_evals
-        carry, (l, b, dd) = seg_fn(carry, vis, gms, keys, ws,
-                                   jnp.asarray(e0, jnp.int32))
-        jax.block_until_ready(carry)
+        with obs_spans.span("sweep/segment", e0=int(e0)):
+            carry, (l, b, dd) = seg_fn(carry, vis, gms, keys, ws,
+                                       jnp.asarray(e0, jnp.int32))
+            jax.block_until_ready(carry)
         sl = slice(e0, e0 + seg_evals)
         series["losses"][:, sl] = np.asarray(l)
         series["bits"][:, sl] = np.asarray(b)

@@ -152,11 +152,11 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, dist_variant: str,
         **rl.as_dict(),
     }
     if verbose:
-        print(f"[{arch} x {shape_name} x {mesh_kind} x {dist_variant}] "
+        print(f"[{arch} x {shape_name} x {mesh_kind} x {dist_variant}] "  # repro-lint: allow=print-in-library (CLI driver)
               f"compile={rec['compile_s']}s flops/dev={rl.hlo_flops:.3e} "
               f"bytes/dev={rl.hlo_bytes:.3e} "
               f"coll={sum(coll.values()):.3e}B dominant={rl.dominant}")
-        print("  memory_analysis:", rec["memory_analysis"])
+        print("  memory_analysis:", rec["memory_analysis"])  # repro-lint: allow=print-in-library (CLI driver)
     return rec
 
 
@@ -209,7 +209,7 @@ def main():
                            "dist": dv, "status": "error",
                            "error": (proc.stderr or proc.stdout)[-800:]}
                 results.append(rec)
-                print(f"{arch} x {shape} x {mesh_kind} x {dv}: {rec['status']}"
+                print(f"{arch} x {shape} x {mesh_kind} x {dv}: {rec['status']}"  # repro-lint: allow=print-in-library (CLI driver)
                       + (f" ({rec.get('dominant','')})"
                          if rec["status"] == "ok" else ""),
                       flush=True)
@@ -224,11 +224,11 @@ def main():
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
-        print("wrote", args.out)
+        print("wrote", args.out)  # repro-lint: allow=print-in-library (CLI driver)
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skip" for r in results)
     n_err = sum(r["status"] == "error" for r in results)
-    print(f"dryrun: {n_ok} ok, {n_skip} skip, {n_err} error")
+    print(f"dryrun: {n_ok} ok, {n_skip} skip, {n_err} error")  # repro-lint: allow=print-in-library (CLI driver)
     return 1 if n_err else 0
 
 

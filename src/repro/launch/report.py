@@ -32,13 +32,18 @@ def main(path: str):
         print("\n### ERRORS\n")
         for r in err:
             print(f"* {r['arch']} x {r['shape']} x {r['mesh']} x {r['dist']}")
-    # peak memory check
+    # peak memory check — peak_bytes is None on backends whose compiled
+    # memory_analysis is unavailable (CPU dry-runs): render a dash, not a crash
     print("\n### Peak bytes/device (fits 16 GiB v5e?)\n")
     worst = sorted(ok, key=lambda r: -(r["memory_analysis"]["peak_bytes"] or 0))[:8]
     for r in worst:
-        pk = r["memory_analysis"]["peak_bytes"] / 2**30
-        print(f"* {r['arch']} x {r['shape']} x {r['mesh']} x {r['dist']}: "
-              f"{pk:.2f} GiB {'OK' if pk < 16 else 'OVER'}")
+        peak = r["memory_analysis"]["peak_bytes"]
+        tag = f"{r['arch']} x {r['shape']} x {r['mesh']} x {r['dist']}"
+        if peak is None:
+            print(f"* {tag}: — (memory analysis unavailable)")
+            continue
+        pk = peak / 2**30
+        print(f"* {tag}: {pk:.2f} GiB {'OK' if pk < 16 else 'OVER'}")
 
 
 if __name__ == "__main__":

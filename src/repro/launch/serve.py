@@ -59,9 +59,9 @@ def main(argv=None):
                    args.gen, enc_out=enc_out)
     dt = time.time() - t0
     toks = args.batch * (args.prompt_len + args.gen)
-    print(f"generated {out.shape} in {dt:.2f}s ({toks / dt:.0f} tok/s)")
+    print(f"generated {out.shape} in {dt:.2f}s ({toks / dt:.0f} tok/s)")  # repro-lint: allow=print-in-library (CLI driver)
     assert np.isfinite(np.asarray(out)).all()
-    print("sample:", np.asarray(out[0, :16]))
+    print("sample:", np.asarray(out[0, :16]))  # repro-lint: allow=print-in-library (CLI driver)
     return out
 
 

@@ -26,6 +26,8 @@ from repro.data.pipeline import ShardedBatches
 from repro.data.synthetic import TokenStream, TokenStreamConfig
 from repro.launch import mesh as M
 from repro.models.model import build_model
+from repro.obs import events as obs_events
+from repro.obs import spans as obs_spans
 from repro.optim import adam, sgd
 
 
@@ -54,6 +56,8 @@ def main(argv=None):
                          "this flag an existing checkpoint is ignored)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--log-file", default=None)
+    ap.add_argument("--events", default=None,
+                    help="repro.obs JSONL event log (omit: echo-only)")
     # --- fault injection + self-healing (core/faults.py, DESIGN.md §8) ---
     ap.add_argument("--straggler-rate", type=float, default=0.0)
     ap.add_argument("--p-stay", type=float, default=None,
@@ -109,6 +113,12 @@ def main(argv=None):
         vocab=cfg.vocab, seq_len=args.seq, batch=args.batch))
     batches = ShardedBatches(stream, mesh, batch_axes=(args.workers, "data"))
 
+    # console output + optional JSONL log share one schema-checked sink
+    log = obs_events.EventLog(args.events, echo=True)
+    log.start(config={"arch": args.arch, "dist": args.dist,
+                      "steps": args.steps, "batch": args.batch,
+                      "seq": args.seq, "lr": args.lr},
+              fingerprint=f"{args.arch}:{args.dist}:s{args.s}")
     with jax.set_mesh(mesh):
         params = jax.device_put(params, pshard)
         state = init_state(params)
@@ -118,10 +128,12 @@ def main(argv=None):
             # one restore, one (re)trace: the killed run's state slots into
             # the same jitted step, so resuming compiles exactly once
             state = checkpointer.restore(args.ckpt_dir, state)
-            print(f"restored step {int(state.step)}")
+            log.emit("note", text=f"restored step {int(state.step)}")
 
         logs = []
-        t0 = time.time()
+        obs_spans.reset()
+        t0 = time.perf_counter()
+        compile_s = None        # first jstep call = compile + one step
         jlocal = jax.jit(local_fn) if local_fn else None
         # host-side divergence sentinel: last good state + geometric lr backoff
         good_state, lr_scale, rollbacks = state, 1.0, 0
@@ -131,8 +143,16 @@ def main(argv=None):
             batch = batches.batch_at(i)
             if jlocal is not None and (i + 1) % args.local_steps:
                 state, (loss, metrics) = jlocal(state, batch)
+            elif compile_s is None:
+                # compile-vs-execute split: the first communicating step
+                # pays the trace+compile; block so the span measures it
+                with obs_spans.span("train/compile+first_step"):
+                    state, (loss, metrics) = jstep(state, batch)
+                    jax.block_until_ready(loss)
+                compile_s = time.perf_counter() - t0
             else:
-                state, (loss, metrics) = jstep(state, batch)
+                with obs_spans.span("train/step"):
+                    state, (loss, metrics) = jstep(state, batch)
             if i % args.log_every == 0 or i == start + args.steps - 1:
                 loss_f = float(loss)
                 bad = not np.isfinite(loss_f) or (
@@ -150,16 +170,16 @@ def main(argv=None):
                     _, step_fn2 = dist.make_train_step(model, opt2, dcfg,
                                                        mesh, grad_specs=gspecs)
                     jstep = jax.jit(step_fn2)
-                    print({"rollback": rollbacks, "to_step": int(state.step),
-                           "lr_scale": lr_scale})
+                    log.emit("rollback", step=int(state.step),
+                             count=rollbacks, lr_scale=lr_scale)
                     i = int(state.step)
                     continue
                 rec = {"step": int(state.step), "loss": round(loss_f, 4),
                        "nll": round(float(metrics["nll"]), 4),
-                       "wall_s": round(time.time() - t0, 1),
+                       "wall_s": round(time.perf_counter() - t0, 1),
                        "rollbacks": rollbacks}
                 logs.append(rec)
-                print(rec)
+                log.emit("train_step", **rec)
                 assert np.isfinite(loss_f), "loss diverged"
                 good_state = state
             if (args.ckpt_every and args.ckpt_dir
@@ -168,6 +188,14 @@ def main(argv=None):
             i += 1
         if args.ckpt_dir:
             checkpointer.save(args.ckpt_dir, int(state.step), state)
+    wall = time.perf_counter() - t0
+    steady = obs_spans.total("train/step")
+    if compile_s is not None:
+        log.emit("span", name="train/compile+first_step", dur_s=compile_s)
+    if steady > 0:
+        log.emit("span", name="train/steady_steps", dur_s=steady)
+    log.end(status="ok", wall_s=round(wall, 3))
+    log.close()
     if args.log_file:
         with open(args.log_file, "w") as f:
             json.dump(logs, f, indent=1)

@@ -1,0 +1,21 @@
+"""repro.obs — trace-safe telemetry, profiling spans, structured event
+logs, and the benchmark-regression ledger (DESIGN.md §11).
+
+Four pieces, one vocabulary:
+
+  * ``obs.telemetry`` — the metric catalogue and the pure-pytree in-trace
+    carry the sweep/mesh engines thread through their scans (statically
+    gated: disabled == byte-identical trace);
+  * ``obs.events``    — the host-side JSONL event sink + schema +
+    ``summarize`` (fed at ``eval_every`` points, never from device code);
+  * ``obs.spans``     — ``span()`` wall-clock + ``jax.profiler`` wrappers
+    and Perfetto capture (``profile`` / ``perfetto_artifacts``);
+  * ``obs.bench``     — the append-only ``BENCH_history.jsonl`` ledger and
+    its tolerance regression gate for CI.
+
+CLI: ``python -m repro.obs {summary,validate,diff,dashboard,bench-append,
+bench-check,smoke} ...``
+"""
+from repro.obs import bench, events, spans, telemetry            # noqa: F401
+from repro.obs.events import EventLog, read_events, summarize    # noqa: F401
+from repro.obs.spans import profile, span                        # noqa: F401

@@ -1,0 +1,132 @@
+"""Host-side profiling spans + Perfetto trace capture (DESIGN.md §11).
+
+``span("name")`` wraps a host-side region in both a wall-clock timer
+(``time.perf_counter``) and a ``jax.profiler.TraceAnnotation``, so the same
+name shows up (a) in the in-process span ledger this module keeps, (b) in
+the JSONL event log when a sink is installed, and (c) on the Perfetto
+timeline when a ``profile(...)`` capture is active.  The launch layer wraps
+compile vs. execute, the sweep CLI wraps lower/compile/run, and the mesh
+benchmarks wrap ring steps — one vocabulary everywhere.
+
+These are HOST spans: they never appear inside a traced function.  For
+in-trace annotation (visible in XLA op names / the profiler's device
+timeline, metadata-only and DCE-safe) use ``jax.named_scope`` directly —
+``core/dist.py`` and the kernels do.
+
+``profile(log_dir)`` wraps ``jax.profiler.trace`` and returns the
+``.trace.json.gz`` artifacts it produced (Perfetto/Chrome ``chrome://
+tracing`` compatible) via ``perfetto_artifacts``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import pathlib
+import time
+from typing import List, Optional
+
+import jax
+
+_MAX_SPANS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanRecord:
+    name: str
+    t0: float        # perf_counter at entry (monotonic; deltas only)
+    dur_s: float
+    depth: int       # nesting level at entry
+
+
+_SPANS: List[SpanRecord] = []
+_DEPTH = [0]
+_SINK = [None]      # optional EventLog; list cell so tests can swap it
+
+
+def install_sink(log) -> None:
+    """Mirror every closed span into ``log`` (an ``events.EventLog``)."""
+    _SINK[0] = log
+
+
+def uninstall_sink() -> None:
+    _SINK[0] = None
+
+
+def reset() -> None:
+    _SPANS.clear()
+
+
+def records() -> List[SpanRecord]:
+    return list(_SPANS)
+
+
+def total(name: str) -> float:
+    """Summed duration of every closed span called ``name`` (seconds)."""
+    return sum(r.dur_s for r in _SPANS if r.name == name)
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs):
+    """Time a host-side region; mirrors into the profiler timeline + sink."""
+    t0 = time.perf_counter()
+    _DEPTH[0] += 1
+    try:
+        with jax.profiler.TraceAnnotation(name):
+            yield
+    finally:
+        _DEPTH[0] -= 1
+        dur = time.perf_counter() - t0
+        if len(_SPANS) >= _MAX_SPANS:      # bounded: drop oldest
+            del _SPANS[: _MAX_SPANS // 2]
+        _SPANS.append(SpanRecord(name, t0, dur, _DEPTH[0]))
+        if _SINK[0] is not None:
+            _SINK[0].emit("span", name=name, dur_s=dur, depth=_DEPTH[0],
+                          **attrs)
+
+
+@contextlib.contextmanager
+def profile(log_dir: str):
+    """Capture a Perfetto/Chrome trace of the wrapped region into
+    ``log_dir`` (``jax.profiler.trace``); yields the directory path."""
+    with jax.profiler.trace(str(log_dir)):
+        yield log_dir
+
+
+def perfetto_artifacts(log_dir: str) -> List[str]:
+    """The ``.trace.json.gz`` files a ``profile`` capture wrote (possibly
+    several across nested date directories), newest first."""
+    root = pathlib.Path(log_dir)
+    if not root.is_dir():
+        return []
+    hits = sorted(root.rglob("*.trace.json.gz"),
+                  key=lambda p: p.stat().st_mtime, reverse=True)
+    return [str(p) for p in hits]
+
+
+def compile_execute_split(fn, *args) -> dict:
+    """Time ``fn``'s first call (trace+compile+run) vs. a steady-state call,
+    under the spans ``obs/compile`` and ``obs/execute``.  Returns the two
+    durations; the caller reuses ``fn``'s warm executable afterwards."""
+    with span("obs/compile"):
+        out = jax.block_until_ready(fn(*args))
+    with span("obs/execute"):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return {"compile_s": _SPANS[-2].dur_s - _SPANS[-1].dur_s,
+            "first_call_s": _SPANS[-2].dur_s,
+            "execute_s": _SPANS[-1].dur_s}
+
+
+def summarize_spans(recs: Optional[List[SpanRecord]] = None) -> List[dict]:
+    """Aggregate by name: count, total, mean, max (sorted by total desc)."""
+    recs = _SPANS if recs is None else recs
+    agg = {}
+    for r in recs:
+        a = agg.setdefault(r.name, {"name": r.name, "count": 0,
+                                    "total_s": 0.0, "max_s": 0.0})
+        a["count"] += 1
+        a["total_s"] += r.dur_s
+        a["max_s"] = max(a["max_s"], r.dur_s)
+    for a in agg.values():
+        a["mean_s"] = a["total_s"] / a["count"]
+    return sorted(agg.values(), key=lambda a: -a["total_s"])

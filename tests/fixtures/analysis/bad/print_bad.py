@@ -1,0 +1,11 @@
+"""Seeded print-in-library violation: a library helper that narrates its
+progress with bare print() calls instead of routing through the obs event
+sink (or living in a __main__ CLI module)."""
+
+
+def run_epoch(step: int, loss: float) -> float:
+    print(f"step {step}: loss={loss:.4f}")
+    if loss > 1e3:
+        print("loss blew up, clipping")
+        loss = 1e3
+    return loss

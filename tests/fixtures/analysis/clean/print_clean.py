@@ -1,0 +1,12 @@
+"""Clean twin of print_bad.py: the same progress narration routed through
+the schema-checked event sink — ``echo=True`` mirrors to the console, so
+nothing is lost, and the output is machine-readable JSONL."""
+from repro.obs import events
+
+
+def run_epoch(log: events.EventLog, step: int, loss: float) -> float:
+    log.emit("train_step", step=step, loss=loss, wall_s=0.0)
+    if loss > 1e3:
+        log.emit("note", text="loss blew up, clipping")
+        loss = 1e3
+    return loss

@@ -248,6 +248,62 @@ def scenario_codec_wire_guard():
         assert res["ok"], (name, res)
 
 
+def scenario_obs_wire_telemetry():
+    """Observability (repro.obs): DistConfig(telemetry=True) attaches a
+    psum'd ``obs`` dict to the step metrics whose per-worker wire_bytes
+    matches the codec-derived roofline model EXACTLY on both ring wires
+    (bucketed + leaf); the psum fallback reports its dense-f32 proxy; and
+    telemetry is loss-neutral + absent from metrics when off.  The measured
+    vs model numbers round-trip as schema-valid ``wire`` events."""
+    import dataclasses
+    import tempfile
+
+    from repro.obs import events as obs_events
+    from repro.optim import sgd as _sgd
+
+    log_path = tempfile.mktemp(suffix=".jsonl")
+    with obs_events.EventLog(log_path) as log:
+        for wire, impl in [("bucketed", "pipelined"),
+                           ("bucketed", "sequential"),
+                           ("bucketed", "psum"),
+                           ("leaf", "sequential")]:
+            mesh, model, params, dcfg, init_state, step_fn, batch = _setup(
+                "artemis", wire=wire, reduce_impl=impl,
+                mesh_shape=(4,), axes=("pod",))
+            dcfg_t = dataclasses.replace(dcfg, telemetry=True)
+            init_t, step_t = dist.make_train_step(model, _sgd(0.05),
+                                                  dcfg_t, mesh)
+            state, (loss, m) = jax.jit(step_t)(init_t(params), batch)
+            assert "obs" in m, (wire, impl, sorted(m))
+            obs = {k: float(v) for k, v in m["obs"].items()}
+            assert obs["mesh_active"] == 4.0, obs
+            # telemetry off: no obs key, identical loss
+            _, (loss0, m0) = jax.jit(step_fn)(init_state(params), batch)
+            assert "obs" not in m0, (wire, impl)
+            assert float(loss0) == float(loss), (wire, impl)
+            if wire == "bucketed":
+                lay = dcfg.layout(params)
+                wm = roofline.bucketed_wire_model(
+                    n_workers=4, n_buckets=lay.n_buckets, rows=lay.rows,
+                    row=lay.row, codec=dcfg.wire_codec(lay.row))
+            else:
+                shapes = [tuple(l.shape) for l in jax.tree.leaves(params)]
+                wm = roofline.leaf_wire_model(shapes, n_workers=4,
+                                              codec=dcfg.wire_codec(64))
+            per_worker = obs["wire_bytes"] / 4.0
+            log.emit("wire", wire=wire, reduce_impl=impl,
+                     measured_bytes=per_worker,
+                     model_bytes=wm["wire_bytes_per_step"])
+            if impl == "psum":          # dense all-reduce proxy, not a ring
+                assert per_worker > wm["wire_bytes_per_step"], (wire, impl)
+            else:
+                assert per_worker == wm["wire_bytes_per_step"], (
+                    wire, impl, per_worker, wm["wire_bytes_per_step"])
+    evs = obs_events.read_events(log_path)
+    assert len(evs) == 4
+    assert obs_events.validate_events(evs) == []
+
+
 if __name__ == "__main__":
     name = sys.argv[1]
     globals()[f"scenario_{name}"]()

@@ -37,10 +37,11 @@ BAD_CASES = [
     ("jit_global_bad.py", {"jit-mutable-global"}),
     ("interpret_bad.py", {"hardcoded-interpret"}),
     ("static_bad.py", {"static-unhashable-default"}),
+    ("print_bad.py", {"print-in-library"}),
 ]
 
 CLEAN_TWINS = ["prng_clean.py", "tracer_clean.py", "jit_global_clean.py",
-               "interpret_clean.py", "static_clean.py"]
+               "interpret_clean.py", "static_clean.py", "print_clean.py"]
 
 
 @pytest.mark.parametrize("name,expected", BAD_CASES)
@@ -236,7 +237,8 @@ def test_cli_fails_on_seeded_fixtures():
     assert res.returncode == 1, res.stdout + res.stderr
     for rule in ("prng-key-reuse", "prng-split-overflow",
                  "tracer-python-branch", "jit-mutable-global",
-                 "hardcoded-interpret", "static-unhashable-default"):
+                 "hardcoded-interpret", "static-unhashable-default",
+                 "print-in-library"):
         assert rule in res.stdout, rule
 
 
